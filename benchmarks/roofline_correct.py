@@ -1,0 +1,118 @@
+"""Scan-trip-count correction for the roofline table.
+
+XLA's ``cost_analysis()`` counts a while-loop (lax.scan) body ONCE, so the
+reported FLOPs/bytes for an L-layer model miss a factor ~L on the layer
+stack.  We recover per-layer costs with a two-point extrapolation: lower the
+same (arch, shape) at two small layer counts (La, Lb), then
+
+    f(L) = f(La) + (L - La) * (f(Lb) - f(La)) / (Lb - La)
+
+which is exact when layers are homogeneous (DeepSeek's dense layer 0 is
+included in both points, so it cancels).  Collective bytes are corrected the
+same way.  Usage:
+
+  PYTHONPATH=src python -m benchmarks.roofline_correct \
+      [--out benchmarks/results/roofline_corrected.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_arch
+
+# valid small layer counts per arch (vlm: multiples of 5; zamba: of 6;
+# deepseek: > first_dense_layers)
+LAYER_POINTS = {
+    "llama-3.2-vision-11b": (5, 10),
+    "zamba2-2.7b": (6, 12),
+    "deepseek-v2-236b": (2, 4),
+    "seamless-m4t-medium": (2, 4),
+}
+DEFAULT_POINTS = (1, 3)
+
+FIELDS = ("flops_per_dev", "bytes_per_dev")
+
+
+def run_point(arch, shape, layers, out):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--layers", str(layers), "--tag",
+           f"L{layers}", "--out", out]
+    env = dict(os.environ, PYTHONPATH="src",
+               REPRO_SCAN_UNROLL="64")
+    subprocess.run(cmd, check=False, capture_output=True, env=env)
+
+
+def load_jsonl(path):
+    recs = []
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                if line.strip():
+                    recs.append(json.loads(line))
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out",
+                    default="benchmarks/results/roofline_corrected.json")
+    ap.add_argument("--archs", default="")
+    ap.add_argument("--shapes", default="")
+    args = ap.parse_args()
+    archs = args.archs.split(",") if args.archs else ARCH_IDS
+    shapes = args.shapes.split(",") if args.shapes else list(SHAPES)
+
+    base = {(r["arch"], r["shape"]): r for r in load_jsonl(
+        "benchmarks/results/dryrun_single_pod.jsonl")}
+    tmp = tempfile.mktemp(suffix=".jsonl")
+    corrected = {}
+    for arch in archs:
+        La, Lb = LAYER_POINTS.get(arch, DEFAULT_POINTS)
+        L = get_arch(arch).num_layers
+        for shape in shapes:
+            run_point(arch, shape, La, tmp)
+            run_point(arch, shape, Lb, tmp)
+            recs = {r["tag"]: r for r in load_jsonl(tmp)
+                    if r["arch"] == arch and r["shape"] == shape
+                    and r["status"] == "ok"}
+            open(tmp, "w").close()
+            ra, rb = recs.get(f"L{La}"), recs.get(f"L{Lb}")
+            if not (ra and rb):
+                print(f"[correct] {arch} x {shape}: point failed, skipping",
+                      flush=True)
+                continue
+            out = dict(base.get((arch, shape), {}))
+            for f in FIELDS:
+                slope = (rb[f] - ra[f]) / (Lb - La)
+                out[f + "_corr"] = ra[f] + (L - La) * slope
+            ca = ra["collective_bytes_per_dev"].get("total", 0.0)
+            cb = rb["collective_bytes_per_dev"].get("total", 0.0)
+            out["coll_bytes_corr"] = ca + (L - La) * (cb - ca) / (Lb - La)
+            from repro.roofline.analysis import roofline_terms
+            terms = roofline_terms(out["flops_per_dev_corr"],
+                                   out["bytes_per_dev_corr"],
+                                   out["coll_bytes_corr"])
+            out.update({k + "_corr": v for k, v in terms.items()})
+            if out.get("flops_per_dev_corr"):
+                out["useful_flops_ratio_corr"] = (
+                    out.get("model_flops_per_dev", 0.0)
+                    / out["flops_per_dev_corr"])
+            corrected[f"{arch}|{shape}"] = out
+            print(f"[correct] {arch} x {shape}: "
+                  f"flops {out.get('flops_per_dev', 0):.2e} -> "
+                  f"{out['flops_per_dev_corr']:.2e}, dom "
+                  f"{out.get('dominant')} -> {out['dominant_corr']}",
+                  flush=True)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(corrected, f, indent=1)
+    print(f"[correct] wrote {args.out} ({len(corrected)} combos)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Render the dry-run JSONL records into the EXPERIMENTS.md roofline table.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report \
+      benchmarks/results/dryrun_single_pod.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load(paths):
+    recs = []
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                if line.strip():
+                    recs.append(json.loads(line))
+    # keep the latest record per (arch, shape, mesh, tag)
+    latest = {}
+    for r in recs:
+        latest[(r["arch"], r["shape"], r["mesh"], r.get("tag", ""))] = r
+    return list(latest.values())
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-6:
+        return f"{x * 1e9:.1f}ns"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}us"
+    if x < 1.0:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def table(recs):
+    rows = ["| arch | shape | mesh | compute | memory | collective | "
+            "dominant | useful-FLOPs | status |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | -"
+                        f" | - | - | - | FAIL: {r.get('error', '')[:60]} |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | {r['dominant']} | "
+            f"{100 * r.get('useful_flops_ratio', 0):.0f}% | ok |")
+    return "\n".join(rows)
+
+
+def main():
+    paths = sys.argv[1:] or ["benchmarks/results/dryrun_single_pod.jsonl"]
+    recs = load(paths)
+    print(table(recs))
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    print(f"\n{n_ok}/{len(recs)} combos OK")
+    doms = defaultdict(int)
+    for r in recs:
+        if r["status"] == "ok":
+            doms[r["dominant"]] += 1
+    print("dominant-term histogram:", dict(doms))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,289 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  Table I   -> bench_provider_ap          (per-provider mAP / AP50 / AP75)
+  Fig. 2    -> bench_ensemble_combos      (AP50 of provider combinations)
+  Table II  -> bench_baselines            (Random-1/N, Ensemble-N, Armol
+                                           w/gt, w/o gt, PPO, TD3, UB)
+  Fig. 6/7  -> bench_baselines also emits per-epoch AP50/cost curves
+  Table III -> bench_scalability          (10 providers, 1023 actions)
+  kernels   -> bench_kernels              (us_per_call vs jnp reference)
+
+Budgets are sized for the CPU container; set REPRO_BENCH_EPOCHS /
+REPRO_BENCH_IMAGES / REPRO_BENCH_STEPS to scale up (paper scale: 100
+epochs x 2000 steps, batch 1000).  Results land in benchmarks/results/
+*.json and are printed as ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+EPOCHS = int(os.environ.get("REPRO_BENCH_EPOCHS", "3"))
+IMAGES = int(os.environ.get("REPRO_BENCH_IMAGES", "400"))
+STEPS = int(os.environ.get("REPRO_BENCH_STEPS", "400"))
+
+
+def _emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def _save(name: str, obj) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+
+
+def _traces():
+    from repro.federation.providers import default_providers
+    from repro.federation.traces import generate_traces
+    return generate_traces(default_providers(), IMAGES, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Table I: per-provider AP
+# ---------------------------------------------------------------------------
+
+def bench_provider_ap(traces=None):
+    from repro.ensemble.metrics import average_precision, ap50, coco_map
+    traces = traces if traces is not None else _traces()
+    gts = {i: g for i, g in enumerate(traces.gts)}
+    rows = {}
+    t0 = time.time()
+    for pi, p in enumerate(traces.providers):
+        dts = {i: traces.dets[i][pi] for i in range(len(traces))}
+        rows[p.name] = {
+            "mAP": round(100 * coco_map(dts, gts), 2),
+            "AP50": round(100 * ap50(dts, gts), 2),
+            "AP75": round(100 * average_precision(dts, gts, iou_thr=0.75),
+                          2)}
+    us = (time.time() - t0) * 1e6 / max(len(traces) * 3, 1)
+    _save("table1_provider_ap", rows)
+    for name, r in rows.items():
+        _emit(f"table1/{name}", us,
+              f"mAP={r['mAP']};AP50={r['AP50']};AP75={r['AP75']}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2: ensemble combinations
+# ---------------------------------------------------------------------------
+
+def bench_ensemble_combos(traces=None):
+    from repro.ensemble.metrics import ap50
+    from repro.ensemble.pipeline import ensemble_detections
+    traces = traces if traces is not None else _traces()
+    gts = {i: g for i, g in enumerate(traces.gts)}
+    names = [p.name for p in traces.providers]
+    rows = {}
+    t0 = time.time()
+    for r in range(1, len(names) + 1):
+        for combo in itertools.combinations(range(len(names)), r):
+            dts = {i: ensemble_detections([traces.dets[i][c] for c in combo])
+                   for i in range(len(traces))}
+            rows["+".join(names[c] for c in combo)] = round(
+                100 * ap50(dts, gts), 2)
+    us = (time.time() - t0) * 1e6 / max(len(rows) * len(traces), 1)
+    _save("fig2_ensemble_combos", rows)
+    for k, v in rows.items():
+        _emit(f"fig2/{k}", us, f"AP50={v}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table II: baselines + Armol variants (+ Fig. 6/7 curves)
+# ---------------------------------------------------------------------------
+
+def _agent_row(history):
+    last = history[-1]
+    return {"mAP": round(last["map"], 2), "AP50": round(last["ap50"], 2),
+            "cost": round(last["cost"], 3), "counts": last["counts"]}
+
+
+def bench_baselines(traces=None):
+    from repro.core.loops import (ensembleN_policy, evaluate_policy,
+                                  random1_policy, randomN_policy, run_ppo,
+                                  run_off_policy, upper_bound)
+    from repro.core.ppo import PPO, PPOConfig
+    from repro.core.sac import SAC, SACConfig
+    from repro.core.td3 import TD3, TD3Config
+    from repro.federation.env import ArmolEnv
+    traces = traces if traces is not None else _traces()
+    rows = {}
+    histories = {}
+    t0 = time.time()
+
+    env = ArmolEnv(traces, mode="gt", beta=0.0, seed=1)
+    for name, pol in (("Random-1", random1_policy(env, seed=0)),
+                      ("Random-N", randomN_policy(env, seed=0)),
+                      ("Ensemble-N", ensembleN_policy(env))):
+        r = evaluate_policy(pol, env)
+        rows[name] = {"mAP": round(r["map"], 2),
+                      "AP50": round(r["ap50"], 2),
+                      "cost": round(r["cost"], 3), "counts": r["counts"]}
+
+    def kw():
+        return dict(epochs=EPOCHS, steps_per_epoch=STEPS, batch_size=256,
+                    start_steps=min(STEPS, 500),
+                    update_after=min(STEPS, 300), update_every=50,
+                    update_iters=50, log=None)
+
+    sac = SAC(SACConfig(state_dim=env.state_dim,
+                        n_providers=env.n_providers, alpha=0.02))
+    histories["Armol-w/ gt"] = run_off_policy(sac, env, **kw())
+    rows["Armol-w/ gt"] = _agent_row(histories["Armol-w/ gt"])
+
+    env_nogt = ArmolEnv(traces, mode="nogt", beta=-0.1, seed=1)
+    sac2 = SAC(SACConfig(state_dim=env_nogt.state_dim,
+                         n_providers=env_nogt.n_providers, alpha=0.02))
+    histories["Armol-w/o gt"] = run_off_policy(sac2, env_nogt, **kw())
+    rows["Armol-w/o gt"] = _agent_row(histories["Armol-w/o gt"])
+
+    ppo = PPO(PPOConfig(state_dim=env.state_dim,
+                        n_providers=env.n_providers))
+    histories["Armol-PPO"] = run_ppo(ppo, env, epochs=EPOCHS,
+                                     steps_per_epoch=STEPS, log=None)
+    rows["Armol-PPO"] = _agent_row(histories["Armol-PPO"])
+
+    td3 = TD3(TD3Config(state_dim=env.state_dim,
+                        n_providers=env.n_providers))
+    histories["Armol-TD3"] = run_off_policy(td3, env, **kw())
+    rows["Armol-TD3"] = _agent_row(histories["Armol-TD3"])
+
+    ub = upper_bound(env)
+    rows["Upper Bound"] = {"mAP": round(ub["map"], 2),
+                           "AP50": round(ub["ap50"], 2),
+                           "cost": round(ub["cost"], 3),
+                           "counts": ub["counts"]}
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    _save("table2_baselines", rows)
+    _save("fig6_training_curves", histories)
+    for k, v in rows.items():
+        _emit(f"table2/{k}", us,
+              f"mAP={v['mAP']};AP50={v['AP50']};cost={v['cost']}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table III: scalability to 10 providers (1023 actions)
+# ---------------------------------------------------------------------------
+
+def bench_scalability():
+    from repro.core.loops import evaluate_policy, run_off_policy, \
+        ensembleN_policy
+    from repro.core.sac import SAC, SACConfig
+    from repro.ensemble.metrics import ap50
+    from repro.federation.env import ArmolEnv
+    from repro.federation.providers import scalability_providers
+    from repro.federation.traces import generate_traces
+    t0 = time.time()
+    traces = generate_traces(scalability_providers(), IMAGES, seed=0)
+    gts = {i: g for i, g in enumerate(traces.gts)}
+    rows = {}
+    for pi, p in enumerate(traces.providers):
+        dts = {i: traces.dets[i][pi] for i in range(len(traces))}
+        rows[f"MLaaS {pi}"] = {"AP50": round(100 * ap50(dts, gts), 2),
+                               "cost": 1.0}
+    env = ArmolEnv(traces, mode="gt", beta=0.0, seed=1)
+    r = evaluate_policy(ensembleN_policy(env), env)
+    rows["All"] = {"AP50": round(r["ap50"], 2), "cost": round(r["cost"], 2)}
+    sac = SAC(SACConfig(state_dim=env.state_dim,
+                        n_providers=env.n_providers, alpha=0.02))
+    hist = run_off_policy(sac, env, epochs=EPOCHS, steps_per_epoch=STEPS,
+                          batch_size=256, start_steps=min(STEPS, 500),
+                          update_after=min(STEPS, 300), update_every=50,
+                          update_iters=50, log=None)
+    rows["Armol"] = {"AP50": round(hist[-1]["ap50"], 2),
+                     "cost": round(hist[-1]["cost"], 3)}
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    _save("table3_scalability", rows)
+    _save("fig8_training_curve_10p", hist)
+    for k, v in rows.items():
+        _emit(f"table3/{k}", us, f"AP50={v['AP50']};cost={v['cost']}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Kernel microbenchmarks (CPU interpret mode — correctness-level timing)
+# ---------------------------------------------------------------------------
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.iou_matrix.kernel import iou_matrix_pallas
+    from repro.kernels.iou_matrix.ref import iou_matrix_ref
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_naive
+    rng = np.random.default_rng(0)
+    rows = {}
+
+    def timeit(fn, *args, n=5):
+        fn(*args)                      # compile
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.time() - t0) * 1e6 / n
+
+    a = jnp.asarray(rng.random((256, 4)), jnp.float32)
+    b = jnp.asarray(rng.random((512, 4)), jnp.float32)
+    rows["iou_pallas_interp"] = timeit(
+        lambda x, y: iou_matrix_pallas(x, y, interpret=True), a, b)
+    rows["iou_ref"] = timeit(iou_matrix_ref, a, b)
+
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    rows["flash_pallas_interp"] = timeit(
+        lambda x: flash_attention_pallas(x, x, x, block_q=64, block_k=64,
+                                         interpret=True), q)
+    rows["flash_ref"] = timeit(lambda x: attention_ref(x, x, x), q)
+
+    xh = jnp.asarray(rng.standard_normal((1, 128, 2, 16)), jnp.float32)
+    dt = jnp.asarray(rng.random((1, 128, 2)) * 0.4 + 0.05, jnp.float32)
+    A = -jnp.ones((2,), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((1, 128, 8)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((1, 128, 8)), jnp.float32)
+    rows["ssd_pallas_interp"] = timeit(
+        lambda *xs: ssd_scan(*xs, chunk=32), xh, dt, A, Bm, Cm)
+    rows["ssd_ref_naive"] = timeit(ssd_naive, xh, dt, A, Bm, Cm)
+
+    _save("kernel_micro", rows)
+    for k, v in rows.items():
+        _emit(f"kernels/{k}", v, "interpret-mode; TPU is the target")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+
+BENCHES = {
+    "provider_ap": bench_provider_ap,
+    "ensemble_combos": bench_ensemble_combos,
+    "baselines": bench_baselines,
+    "scalability": bench_scalability,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    only = [a for a in sys.argv[1:] if not a.startswith("-")]
+    names = only or list(BENCHES)
+    print("name,us_per_call,derived")
+    shared = None
+    for n in names:
+        fn = BENCHES[n]
+        if n in ("provider_ap", "ensemble_combos", "baselines"):
+            if shared is None:
+                shared = _traces()
+            fn(shared)
+        else:
+            fn()
+
+
+if __name__ == "__main__":
+    main()

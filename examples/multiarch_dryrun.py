@@ -1,0 +1,29 @@
+"""Lower+compile one (arch x shape) on the production mesh and print its
+roofline terms — the single-combo version of ``python -m
+repro.launch.dryrun --all``.
+
+  PYTHONPATH=src python examples/multiarch_dryrun.py \
+      --arch deepseek-v2-236b --shape train_4k --multi-pod
+"""
+import argparse
+import json
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+           "--shape", args.shape]
+    if args.multi_pod:
+        cmd.append("--multi-pod")
+    # subprocess so the 512-device XLA flag never leaks into this process
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

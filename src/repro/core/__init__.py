@@ -1,0 +1,10 @@
+# The paper's primary contribution: combinatorial-RL MLaaS provider
+# selection (Armol).  Agents (SAC / TD3 / PPO), the nearest-neighbour
+# combinatorial action mapping, replay buffer, and the state feature
+# extractor live here; the environment/trace substrate is repro.federation.
+from repro.core.action_space import (threshold_map, codebook,  # noqa: F401
+                                     nearest_in_codebook, wolpertinger_select)
+from repro.core.replay_buffer import ReplayBuffer  # noqa: F401
+from repro.core.sac import SAC, SACConfig  # noqa: F401
+from repro.core.td3 import TD3, TD3Config  # noqa: F401
+from repro.core.ppo import PPO, PPOConfig  # noqa: F401

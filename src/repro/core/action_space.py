@@ -1,0 +1,70 @@
+"""Combinatorial action space for MLaaS provider selection (paper Eq. 3-4).
+
+The actor emits a *proto action* a_hat in [0,1]^N; tau maps it to the nearest
+binary vector in A = {0,1}^N \\ {0}:
+
+    tau(a_hat) = argmin_{a in A} |a - a_hat|^2
+
+Three implementations:
+  * ``threshold_map`` — exact O(N) nearest neighbour.  For the l2 metric over
+    the unconstrained hypercube the NN is elementwise thresholding at 0.5;
+    the a != 0 constraint is enforced by flipping the largest coordinate on
+    (the flip with minimal l2 penalty), which is provably still the argmin
+    over A.
+  * ``nearest_in_codebook`` — brute-force argmin over the enumerated
+    codebook (N <= 16), used as the oracle in property tests.
+  * ``wolpertinger_select`` — beyond-paper: k nearest codebook actions
+    re-ranked by the critic Q(s, a) (Dulac-Arnold et al. 2015), which trades
+    a little compute for robustness to critic/actor mismatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def threshold_map(proto: jnp.ndarray) -> jnp.ndarray:
+    """Exact tau for a single proto action or a batch (last dim = N)."""
+    a = (proto > 0.5).astype(jnp.float32)
+    # enforce a != 0: if empty, set the coordinate with the largest proto
+    empty = jnp.sum(a, axis=-1, keepdims=True) == 0
+    best = jax.nn.one_hot(jnp.argmax(proto, axis=-1), proto.shape[-1],
+                          dtype=jnp.float32)
+    return jnp.where(empty, best, a)
+
+
+@functools.lru_cache(maxsize=8)
+def codebook(n: int) -> np.ndarray:
+    """All binary vectors in {0,1}^n except 0 — shape (2^n - 1, n)."""
+    assert n <= 16, "codebook enumeration is for small N only"
+    idx = np.arange(1, 2 ** n, dtype=np.uint32)
+    bits = ((idx[:, None] >> np.arange(n)[None, :]) & 1).astype(np.float32)
+    return bits
+
+
+def nearest_in_codebook(proto: jnp.ndarray, n: int) -> jnp.ndarray:
+    cb = jnp.asarray(codebook(n))                    # (M, n)
+    d = jnp.sum((cb - proto[..., None, :]) ** 2, axis=-1)   # (..., M)
+    return cb[jnp.argmin(d, axis=-1)]
+
+
+def k_nearest(proto: jnp.ndarray, n: int, k: int) -> jnp.ndarray:
+    cb = jnp.asarray(codebook(n))
+    d = jnp.sum((cb - proto[..., None, :]) ** 2, axis=-1)   # (..., M)
+    _, idx = jax.lax.top_k(-d, k)
+    return cb[idx]                                   # (..., k, n)
+
+
+def wolpertinger_select(proto: jnp.ndarray, state: jnp.ndarray, q_fn,
+                        *, k: int = 8) -> jnp.ndarray:
+    """tau followed by critic re-ranking over the k nearest actions.
+
+    q_fn(state (D,), actions (k, N)) -> (k,) values.
+    """
+    n = proto.shape[-1]
+    cand = k_nearest(proto, n, k)                    # (k, n)
+    q = q_fn(state, cand)
+    return cand[jnp.argmax(q)]

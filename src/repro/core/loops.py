@@ -1,0 +1,192 @@
+"""Training/evaluation loops for the federation agents + paper baselines.
+
+Replicates the paper's protocol: off-policy agents (SAC/TD3) interact with
+the trace env and update from the replay buffer; PPO collects on-policy
+rollouts; at the end of every epoch the agent is evaluated deterministically
+on the held-out test episode (corpus AP50 + average cost + per-provider
+selection counts — the columns of Tab. II).  Baselines: Random-1, Random-N,
+Ensemble-N, and the brute-force Upper Bound (Algo. 2).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.ppo import PPO
+from repro.core.replay_buffer import ReplayBuffer
+from repro.ensemble.metrics import ap50, coco_map, image_ap50
+from repro.federation.env import ArmolEnv
+
+
+# ---------------------------------------------------------------------------
+# Evaluation (one "test episode" = the whole test split)
+# ---------------------------------------------------------------------------
+
+def evaluate_policy(select_fn: Callable[[np.ndarray], np.ndarray],
+                    env: ArmolEnv, *, against: str = "gt") -> Dict:
+    """select_fn(state) -> binary action.  Corpus AP vs the TRUE ground truth
+    (evaluation always uses GT even for w/o-gt-trained agents, as in the
+    paper's Tab. II)."""
+    dts, gts = {}, {}
+    counts = np.zeros(env.n_providers, np.int64)
+    total_cost = 0.0
+    for img in env.test_idx:
+        s = env.features[img]
+        a = select_fn(s)
+        counts += (a > 0.5).astype(np.int64)
+        total_cost += float(np.sum(env.costs * (a > 0.5)))
+        dts[int(img)] = env.ensemble_for(int(img), a)
+        gts[int(img)] = env.traces.gts[int(img)]
+    n = max(len(env.test_idx), 1)
+    return {"ap50": 100.0 * ap50(dts, gts), "map": 100.0 * coco_map(dts, gts),
+            "cost": total_cost / n,
+            "counts": counts.tolist(), "n_images": n}
+
+
+# ---------------------------------------------------------------------------
+# Off-policy driver (SAC / TD3)
+# ---------------------------------------------------------------------------
+
+def run_off_policy(agent, env: ArmolEnv, *, epochs: int = 5,
+                   steps_per_epoch: int = 500, batch_size: int = 256,
+                   start_steps: int = 200, update_after: int = 300,
+                   update_every: int = 50, update_iters: int = 50,
+                   buffer_capacity: int = 100_000, seed: int = 0,
+                   log: Optional[Callable[[str], None]] = print) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    buf = ReplayBuffer(buffer_capacity, env.state_dim, env.n_providers,
+                       seed=seed)
+    history = []
+    s = env.reset(split="train")
+    total = 0
+    for epoch in range(epochs):
+        t0 = time.time()
+        for _ in range(steps_per_epoch):
+            if total < start_steps:
+                a = rng.integers(0, 2, env.n_providers).astype(np.float32)
+                if a.sum() == 0:
+                    a[rng.integers(env.n_providers)] = 1.0
+            else:
+                a, _ = agent.select_action(s)
+            s2, r, done, info = env.step(a)
+            buf.add(s, a, r, s2, float(done))
+            s = env.reset(split="train") if done else s2
+            total += 1
+            if total >= update_after and total % update_every == 0:
+                for _ in range(update_iters):
+                    agent.update(buf.sample(batch_size))
+        res = evaluate_policy(
+            lambda st: agent.select_action(st, deterministic=True)[0], env)
+        res.update({"epoch": epoch, "steps": total,
+                    "wall_s": round(time.time() - t0, 1)})
+        history.append(res)
+        if log:
+            log(f"[{type(agent).__name__}] epoch {epoch}: "
+                f"AP50={res['ap50']:.2f} mAP={res['map']:.2f} "
+                f"cost={res['cost']:.3f} counts={res['counts']}")
+    return history
+
+
+# ---------------------------------------------------------------------------
+# On-policy driver (PPO)
+# ---------------------------------------------------------------------------
+
+def run_ppo(agent: PPO, env: ArmolEnv, *, epochs: int = 5,
+            steps_per_epoch: int = 500, seed: int = 0,
+            log: Optional[Callable[[str], None]] = print) -> List[Dict]:
+    history = []
+    s = env.reset(split="train")
+    for epoch in range(epochs):
+        t0 = time.time()
+        S, P, LP, R, D, V = [], [], [], [], [], []
+        for _ in range(steps_per_epoch):
+            a, proto, logp, v = agent.select_action(s)
+            s2, r, done, info = env.step(a)
+            S.append(s)
+            P.append(proto)
+            LP.append(logp)
+            R.append(r)
+            D.append(float(done))
+            V.append(v)
+            s = env.reset(split="train") if done else s2
+        _, _, _, last_v = agent.select_action(s)
+        adv, ret = agent.gae(np.asarray(R, np.float32),
+                             np.asarray(V, np.float32),
+                             np.asarray(D, np.float32), last_v)
+        rollout = {"s": np.asarray(S, np.float32),
+                   "proto": np.asarray(P, np.float32),
+                   "logp": np.asarray(LP, np.float32),
+                   "adv": adv, "ret": ret}
+        agent.update_from_rollout(rollout)
+        res = evaluate_policy(
+            lambda st: agent.select_action(st, deterministic=True)[0], env)
+        res.update({"epoch": epoch, "wall_s": round(time.time() - t0, 1)})
+        history.append(res)
+        if log:
+            log(f"[PPO] epoch {epoch}: AP50={res['ap50']:.2f} "
+                f"cost={res['cost']:.3f}")
+    return history
+
+
+# ---------------------------------------------------------------------------
+# Baselines (Tab. II)
+# ---------------------------------------------------------------------------
+
+def random1_policy(env: ArmolEnv, seed: int = 0):
+    rng = np.random.default_rng(seed)
+
+    def f(_s):
+        a = np.zeros(env.n_providers, np.float32)
+        a[rng.integers(env.n_providers)] = 1.0
+        return a
+    return f
+
+
+def randomN_policy(env: ArmolEnv, seed: int = 0):
+    rng = np.random.default_rng(seed)
+
+    def f(_s):
+        a = rng.integers(0, 2, env.n_providers).astype(np.float32)
+        if a.sum() == 0:
+            a[rng.integers(env.n_providers)] = 1.0
+        return a
+    return f
+
+
+def ensembleN_policy(env: ArmolEnv):
+    def f(_s):
+        return np.ones(env.n_providers, np.float32)
+    return f
+
+
+def upper_bound(env: ArmolEnv) -> Dict:
+    """Brute force (Algo. 2): per test image, the best action by per-image
+    AP50; ties broken toward the cheaper subset (enumeration in increasing
+    popcount order, strict improvement required)."""
+    n = env.n_providers
+    actions = []
+    for a in itertools.product([0, 1], repeat=n):
+        if any(a):
+            actions.append(np.asarray(a, np.float32))
+    actions.sort(key=lambda a: (a.sum(),))
+    dts, gts = {}, {}
+    counts = np.zeros(n, np.int64)
+    total_cost = 0.0
+    for img in env.test_idx:
+        best_v, best_a, best_d = -1.0, None, None
+        gt = env.traces.gts[int(img)]
+        for a in actions:
+            d = env.ensemble_for(int(img), a)
+            v = image_ap50(d, gt)
+            if v > best_v:
+                best_v, best_a, best_d = v, a, d
+        counts += (best_a > 0.5).astype(np.int64)
+        total_cost += float(np.sum(env.costs * (best_a > 0.5)))
+        dts[int(img)] = best_d
+        gts[int(img)] = gt
+    m = max(len(env.test_idx), 1)
+    return {"ap50": 100.0 * ap50(dts, gts), "map": 100.0 * coco_map(dts, gts),
+            "cost": total_cost / m, "counts": counts.tolist(), "n_images": m}

@@ -1,0 +1,146 @@
+"""MLP actor/critic networks (pure-pytree) and the state feature extractor.
+
+The paper uses two-hidden-layer FCNs for the actor and both Q-networks, and
+a pretrained MobileNet for image features.  The feature extractor here is a
+fixed-seed depthwise-separable conv stack (same role: image -> feature
+vector; no torch / no downloaded weights offline).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_STD_MIN, LOG_STD_MAX = -20.0, 2.0
+
+
+def _linear_init(key, fan_in, fan_out):
+    k1, k2 = jax.random.split(key)
+    lim = 1.0 / math.sqrt(fan_in)
+    return {"w": jax.random.uniform(k1, (fan_in, fan_out), jnp.float32,
+                                    -lim, lim),
+            "b": jax.random.uniform(k2, (fan_out,), jnp.float32, -lim, lim)}
+
+
+def init_mlp(key, sizes: Sequence[int]):
+    keys = jax.random.split(key, len(sizes) - 1)
+    return [_linear_init(k, sizes[i], sizes[i + 1])
+            for i, k in enumerate(keys)]
+
+
+def apply_mlp(params, x, *, final_act=None):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Squashed-Gaussian actor (SAC): proto action in (0,1)^N
+# ---------------------------------------------------------------------------
+
+def init_actor(key, state_dim: int, n_providers: int, hidden=(256, 256)):
+    return init_mlp(key, (state_dim, *hidden, 2 * n_providers))
+
+
+def actor_dist(params, state):
+    out = apply_mlp(params, state)
+    mu, log_std = jnp.split(out, 2, axis=-1)
+    log_std = jnp.clip(log_std, LOG_STD_MIN, LOG_STD_MAX)
+    return mu, log_std
+
+
+def sample_action(params, state, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reparameterised sample; returns (proto in (0,1)^N, log_prob)."""
+    mu, log_std = actor_dist(params, state)
+    std = jnp.exp(log_std)
+    u = mu + std * jax.random.normal(key, mu.shape)
+    t = jnp.tanh(u)
+    proto = 0.5 * (t + 1.0)
+    # N(u; mu, std) log-density
+    logp = -0.5 * (((u - mu) / std) ** 2 + 2 * log_std
+                   + jnp.log(2 * jnp.pi))
+    # change of variables: proto = (tanh(u)+1)/2  =>  d proto/du = (1-t^2)/2
+    logdet = jnp.log(jnp.maximum((1 - t ** 2) * 0.5, 1e-9))
+    return proto, jnp.sum(logp - logdet, axis=-1)
+
+
+def mean_action(params, state):
+    mu, _ = actor_dist(params, state)
+    return 0.5 * (jnp.tanh(mu) + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic actor (TD3)
+# ---------------------------------------------------------------------------
+
+def init_det_actor(key, state_dim: int, n_providers: int, hidden=(256, 256)):
+    return init_mlp(key, (state_dim, *hidden, n_providers))
+
+
+def det_action(params, state):
+    return apply_mlp(params, state, final_act=jax.nn.sigmoid)
+
+
+# ---------------------------------------------------------------------------
+# Q and V critics
+# ---------------------------------------------------------------------------
+
+def init_q(key, state_dim: int, n_providers: int, hidden=(256, 256)):
+    return init_mlp(key, (state_dim + n_providers, *hidden, 1))
+
+
+def q_value(params, state, action):
+    x = jnp.concatenate([state, action], axis=-1)
+    return apply_mlp(params, x)[..., 0]
+
+
+def init_v(key, state_dim: int, hidden=(256, 256)):
+    return init_mlp(key, (state_dim, *hidden, 1))
+
+
+def v_value(params, state):
+    return apply_mlp(params, state)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Feature extractor ("MobileNet" role): image (H,W,3) -> (feat_dim,)
+# ---------------------------------------------------------------------------
+
+def init_feature_extractor(key, *, channels=(8, 16, 32), feat_dim=64):
+    params = []
+    c_in = 3
+    for i, c_out in enumerate(channels):
+        k1, k2, key = jax.random.split(key, 3)
+        params.append({
+            "dw": jax.random.normal(k1, (3, 3, 1, c_in), jnp.float32)
+            * (1.0 / 3.0),
+            "pw": jax.random.normal(k2, (1, 1, c_in, c_out), jnp.float32)
+            * (1.0 / math.sqrt(c_in)),
+        })
+        c_in = c_out
+    k1, _ = jax.random.split(key)
+    head = _linear_init(k1, c_in, feat_dim)
+    return {"convs": params, "head": head}
+
+
+def extract_features(params, img):
+    """img: (H, W, 3) float32 in [0,1] -> (feat_dim,)."""
+    x = img[None]                                     # NHWC
+    for layer in params["convs"]:
+        x = jax.lax.conv_general_dilated(
+            x, layer["dw"], window_strides=(2, 2), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=x.shape[-1])
+        x = jax.lax.conv_general_dilated(
+            x, layer["pw"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x)
+    feat = jnp.mean(x, axis=(1, 2))[0]                # global average pool
+    h = feat @ params["head"]["w"] + params["head"]["b"]
+    return jnp.tanh(h)

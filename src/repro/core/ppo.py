@@ -1,0 +1,135 @@
+"""PPO baseline (Armol-P): clipped-surrogate on-policy policy gradient.
+
+Squashed-Gaussian actor over the proto-action hypercube + V critic, GAE
+advantages, minibatched epochs over each collected rollout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import networks as nets
+from repro.core.action_space import threshold_map
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    state_dim: int
+    n_providers: int
+    hidden: tuple = (256, 256)
+    lr: float = 1e-4
+    gamma: float = 0.9
+    lam: float = 0.95
+    clip: float = 0.2
+    entropy_coef: float = 0.01
+    update_epochs: int = 4
+    minibatch: int = 256
+    seed: int = 0
+
+
+class PPOState(NamedTuple):
+    actor: Any
+    critic: Any
+    opt_actor: AdamWState
+    opt_critic: AdamWState
+    key: jnp.ndarray
+
+
+def _init_state(cfg: PPOConfig) -> PPOState:
+    k = jax.random.PRNGKey(cfg.seed)
+    ka, kc, kr = jax.random.split(k, 3)
+    actor = nets.init_actor(ka, cfg.state_dim, cfg.n_providers, cfg.hidden)
+    critic = nets.init_v(kc, cfg.state_dim, cfg.hidden)
+    return PPOState(actor, critic, adamw_init(actor), adamw_init(critic), kr)
+
+
+def _logp(actor, s, proto):
+    """Log-density of a stored proto action under the current policy."""
+    mu, log_std = nets.actor_dist(actor, s)
+    std = jnp.exp(log_std)
+    t = jnp.clip(2.0 * proto - 1.0, -1 + 1e-6, 1 - 1e-6)
+    u = jnp.arctanh(t)
+    logp = -0.5 * (((u - mu) / std) ** 2 + 2 * log_std + jnp.log(2 * jnp.pi))
+    logdet = jnp.log(jnp.maximum((1 - t ** 2) * 0.5, 1e-9))
+    return jnp.sum(logp - logdet, axis=-1)
+
+
+@partial(jax.jit, static_argnums=0)
+def _minibatch_update(cfg: PPOConfig, state: PPOState, mb):
+    s, proto, logp_old, adv, ret = mb["s"], mb["proto"], mb["logp"], \
+        mb["adv"], mb["ret"]
+    adv = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+
+    def pi_loss(ap):
+        logp = _logp(ap, s, proto)
+        ratio = jnp.exp(logp - logp_old)
+        clipped = jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip)
+        ent = -jnp.mean(logp)
+        return -jnp.mean(jnp.minimum(ratio * adv, clipped * adv)) \
+            - cfg.entropy_coef * ent
+    pl, pg = jax.value_and_grad(pi_loss)(state.actor)
+    actor, opt_actor = adamw_update(state.actor, pg, state.opt_actor,
+                                    lr=cfg.lr)
+
+    def v_loss(cp):
+        return jnp.mean((nets.v_value(cp, s) - ret) ** 2)
+    vl, vg = jax.value_and_grad(v_loss)(state.critic)
+    critic, opt_critic = adamw_update(state.critic, vg, state.opt_critic,
+                                      lr=cfg.lr)
+    return PPOState(actor, critic, opt_actor, opt_critic, state.key), \
+        {"pi_loss": pl, "v_loss": vl}
+
+
+@partial(jax.jit, static_argnums=0)
+def _act(cfg: PPOConfig, state: PPOState, s, deterministic: bool):
+    key, sub = jax.random.split(state.key)
+    proto_s, logp = nets.sample_action(state.actor, s, sub)
+    proto_d = nets.mean_action(state.actor, s)
+    proto = jnp.where(deterministic, proto_d, proto_s)
+    v = nets.v_value(state.critic, s)
+    return threshold_map(proto), proto, logp, v, state._replace(key=key)
+
+
+class PPO:
+    def __init__(self, cfg: PPOConfig):
+        self.cfg = cfg
+        self.state = _init_state(cfg)
+
+    def select_action(self, s: np.ndarray, *, deterministic=False):
+        a, proto, logp, v, self.state = _act(self.cfg, self.state,
+                                             jnp.asarray(s), deterministic)
+        return np.asarray(a), np.asarray(proto), float(logp), float(v)
+
+    def gae(self, rewards, values, dones, last_value):
+        cfg = self.cfg
+        T = len(rewards)
+        adv = np.zeros(T, np.float32)
+        lastgaelam = 0.0
+        for t in reversed(range(T)):
+            nonterminal = 1.0 - dones[t]
+            nextv = last_value if t == T - 1 else values[t + 1]
+            delta = rewards[t] + cfg.gamma * nextv * nonterminal - values[t]
+            lastgaelam = delta + cfg.gamma * cfg.lam * nonterminal \
+                * lastgaelam
+            adv[t] = lastgaelam
+        ret = adv + np.asarray(values, np.float32)
+        return adv, ret
+
+    def update_from_rollout(self, rollout: Dict[str, np.ndarray]):
+        cfg = self.cfg
+        n = len(rollout["s"])
+        rng = np.random.default_rng(0)
+        metrics = {}
+        for _ in range(cfg.update_epochs):
+            perm = rng.permutation(n)
+            for i in range(0, n, cfg.minibatch):
+                idx = perm[i:i + cfg.minibatch]
+                mb = {k: jnp.asarray(v[idx]) for k, v in rollout.items()}
+                self.state, metrics = _minibatch_update(cfg, self.state, mb)
+        return {k: float(v) for k, v in metrics.items()}

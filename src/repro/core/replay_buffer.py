@@ -1,0 +1,39 @@
+"""Circular replay buffer (host-side numpy; batches feed jitted updates)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, state_dim: int, action_dim: int,
+                 seed: int = 0):
+        self.capacity = capacity
+        self.state = np.zeros((capacity, state_dim), np.float32)
+        self.action = np.zeros((capacity, action_dim), np.float32)
+        self.reward = np.zeros((capacity,), np.float32)
+        self.next_state = np.zeros((capacity, state_dim), np.float32)
+        self.done = np.zeros((capacity,), np.float32)
+        self.size = 0
+        self.ptr = 0
+        self.rng = np.random.default_rng(seed)
+
+    def add(self, s, a, r, s2, d) -> None:
+        i = self.ptr
+        self.state[i] = s
+        self.action[i] = a
+        self.reward[i] = r
+        self.next_state[i] = s2
+        self.done[i] = d
+        self.ptr = (i + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, batch: int) -> Dict[str, np.ndarray]:
+        idx = self.rng.integers(0, self.size, size=batch)
+        return {"s": self.state[idx], "a": self.action[idx],
+                "r": self.reward[idx], "s2": self.next_state[idx],
+                "d": self.done[idx]}
+
+    def __len__(self) -> int:
+        return self.size

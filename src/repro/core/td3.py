@@ -1,0 +1,130 @@
+"""TD3 baseline (Armol-T): twin delayed deterministic policy gradient.
+
+Deterministic sigmoid actor over the proto-action hypercube, target policy
+smoothing, twin critics, delayed actor/target updates (Fujimoto et al.).
+Exploration adds Gaussian noise to the proto action before tau.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import networks as nets
+from repro.core.action_space import threshold_map
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TD3Config:
+    state_dim: int
+    n_providers: int
+    hidden: tuple = (256, 256)
+    lr: float = 1e-4
+    gamma: float = 0.9
+    polyak: float = 0.995
+    act_noise: float = 0.1
+    target_noise: float = 0.2
+    noise_clip: float = 0.5
+    policy_delay: int = 2
+    seed: int = 0
+
+
+class TD3State(NamedTuple):
+    actor: Any
+    actor_targ: Any
+    q1: Any
+    q2: Any
+    q1_targ: Any
+    q2_targ: Any
+    opt_actor: AdamWState
+    opt_q1: AdamWState
+    opt_q2: AdamWState
+    step: jnp.ndarray
+    key: jnp.ndarray
+
+
+def _init_state(cfg: TD3Config) -> TD3State:
+    k = jax.random.PRNGKey(cfg.seed)
+    ka, k1, k2, kr = jax.random.split(k, 4)
+    actor = nets.init_det_actor(ka, cfg.state_dim, cfg.n_providers,
+                                cfg.hidden)
+    q1 = nets.init_q(k1, cfg.state_dim, cfg.n_providers, cfg.hidden)
+    q2 = nets.init_q(k2, cfg.state_dim, cfg.n_providers, cfg.hidden)
+    cp = lambda t: jax.tree.map(jnp.copy, t)  # noqa: E731
+    return TD3State(actor, cp(actor), q1, q2, cp(q1), cp(q2),
+                    adamw_init(actor), adamw_init(q1), adamw_init(q2),
+                    jnp.zeros((), jnp.int32), kr)
+
+
+@partial(jax.jit, static_argnums=0)
+def _update(cfg: TD3Config, state: TD3State, batch):
+    key, kn = jax.random.split(state.key)
+    s, a, r, s2, d = batch["s"], batch["a"], batch["r"], batch["s2"], \
+        batch["d"]
+
+    # target action with clipped smoothing noise, clipped to [0,1]
+    noise = jnp.clip(cfg.target_noise * jax.random.normal(kn, a.shape),
+                     -cfg.noise_clip, cfg.noise_clip)
+    a2 = jnp.clip(nets.det_action(state.actor_targ, s2) + noise, 0.0, 1.0)
+    q1t = nets.q_value(state.q1_targ, s2, a2)
+    q2t = nets.q_value(state.q2_targ, s2, a2)
+    y = jax.lax.stop_gradient(r + cfg.gamma * (1 - d)
+                              * jnp.minimum(q1t, q2t))
+
+    def q_loss(qp):
+        return jnp.mean((nets.q_value(qp, s, a) - y) ** 2)
+    l1, g1 = jax.value_and_grad(q_loss)(state.q1)
+    l2, g2 = jax.value_and_grad(q_loss)(state.q2)
+    q1, opt_q1 = adamw_update(state.q1, g1, state.opt_q1, lr=cfg.lr)
+    q2, opt_q2 = adamw_update(state.q2, g2, state.opt_q2, lr=cfg.lr)
+
+    def pi_loss(ap):
+        return -jnp.mean(nets.q_value(q1, s, nets.det_action(ap, s)))
+    pl, pg = jax.value_and_grad(pi_loss)(state.actor)
+
+    do_pi = (state.step % cfg.policy_delay) == 0
+    actor_new, opt_actor_new = adamw_update(state.actor, pg,
+                                            state.opt_actor, lr=cfg.lr)
+    pick = lambda n, o: jax.tree.map(  # noqa: E731
+        lambda x, yv: jnp.where(do_pi, x, yv), n, o)
+    actor = pick(actor_new, state.actor)
+    opt_actor = jax.tree.map(lambda x, yv: jnp.where(do_pi, x, yv),
+                             opt_actor_new, state.opt_actor)
+    rho = cfg.polyak
+    pol = lambda t, n: jax.tree.map(  # noqa: E731
+        lambda tv, nv: jnp.where(do_pi, rho * tv + (1 - rho) * nv, tv), t, n)
+    new = TD3State(actor, pol(state.actor_targ, actor), q1, q2,
+                   pol(state.q1_targ, q1), pol(state.q2_targ, q2),
+                   opt_actor, opt_q1, opt_q2, state.step + 1, key)
+    return new, {"q1_loss": l1, "q2_loss": l2, "pi_loss": pl}
+
+
+@partial(jax.jit, static_argnums=0)
+def _act(cfg: TD3Config, state: TD3State, s, deterministic: bool):
+    key, kn = jax.random.split(state.key)
+    proto = nets.det_action(state.actor, s)
+    noise = cfg.act_noise * jax.random.normal(kn, proto.shape)
+    proto = jnp.where(deterministic, proto,
+                      jnp.clip(proto + noise, 0.0, 1.0))
+    return threshold_map(proto), proto, state._replace(key=key)
+
+
+class TD3:
+    def __init__(self, cfg: TD3Config):
+        self.cfg = cfg
+        self.state = _init_state(cfg)
+
+    def select_action(self, s: np.ndarray, *, deterministic=False):
+        a, proto, self.state = _act(self.cfg, self.state, jnp.asarray(s),
+                                    deterministic)
+        return np.asarray(a), np.asarray(proto)
+
+    def update(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        self.state, metrics = _update(self.cfg, self.state, jb)
+        return {k: float(v) for k, v in metrics.items()}

@@ -1,0 +1,1 @@
+from repro.data.pipeline import synthetic_lm_batches, batch_for  # noqa: F401

@@ -1,0 +1,93 @@
+"""COCO-style average precision (101-point interpolation).
+
+``average_precision`` evaluates a corpus {image_id: Detections} against
+{image_id: ground truth Detections} at one IoU threshold, per category,
+and averages.  ``coco_map`` averages AP over IoU .50:.05:.95.  The paper
+trains on per-image AP50 rewards and reports corpus AP50/mAP.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+from repro.ensemble.boxes import Detections, iou_matrix
+
+RECALL_POINTS = np.linspace(0.0, 1.0, 101)
+
+
+def _match_image(dt: Detections, gt: Detections, label: int,
+                 iou_thr: float):
+    """Greedy matching for one image+class: returns (scores, tp_flags, n_gt)."""
+    di = np.where(dt.labels == label)[0]
+    gi = np.where(gt.labels == label)[0]
+    if len(di) == 0:
+        return np.zeros(0), np.zeros(0, bool), len(gi)
+    order = di[np.argsort(-dt.scores[di], kind="stable")]
+    tp = np.zeros(len(order), bool)
+    if len(gi):
+        iou = iou_matrix(dt.boxes[order], gt.boxes[gi])
+        taken = np.zeros(len(gi), bool)
+        for r in range(len(order)):
+            best, bj = iou_thr, -1
+            for c in range(len(gi)):
+                if not taken[c] and iou[r, c] >= best:
+                    best, bj = iou[r, c], c
+            if bj >= 0:
+                taken[bj] = True
+                tp[r] = True
+    return dt.scores[order], tp, len(gi)
+
+
+def average_precision(dts: Dict[int, Detections], gts: Dict[int, Detections],
+                      *, iou_thr: float = 0.5,
+                      labels: Optional[Iterable[int]] = None) -> float:
+    """Mean AP over categories present in the ground truth."""
+    if labels is None:
+        labs = set()
+        for g in gts.values():
+            labs.update(np.unique(g.labels).tolist())
+        labels = sorted(labs)
+    aps = []
+    for lab in labels:
+        scores, tps, n_gt = [], [], 0
+        for img, gt in gts.items():
+            dt = dts.get(img, Detections.empty())
+            s, t, n = _match_image(dt, gt, lab, iou_thr)
+            scores.append(s)
+            tps.append(t)
+            n_gt += n
+        if n_gt == 0:
+            continue
+        scores = np.concatenate(scores)
+        tps = np.concatenate(tps)
+        order = np.argsort(-scores, kind="stable")
+        tps = tps[order]
+        tp_cum = np.cumsum(tps)
+        fp_cum = np.cumsum(~tps)
+        recall = tp_cum / n_gt
+        precision = tp_cum / np.maximum(tp_cum + fp_cum, 1e-12)
+        # monotone precision envelope + 101-pt interpolation
+        for i in range(len(precision) - 2, -1, -1):
+            precision[i] = max(precision[i], precision[i + 1])
+        ap = 0.0
+        for r in RECALL_POINTS:
+            idx = np.searchsorted(recall, r, side="left")
+            ap += precision[idx] if idx < len(precision) else 0.0
+        aps.append(ap / len(RECALL_POINTS))
+    return float(np.mean(aps)) if aps else 0.0
+
+
+def ap50(dts, gts, **kw) -> float:
+    return average_precision(dts, gts, iou_thr=0.5, **kw)
+
+
+def coco_map(dts, gts, **kw) -> float:
+    thrs = np.arange(0.5, 0.96, 0.05)
+    return float(np.mean([average_precision(dts, gts, iou_thr=t, **kw)
+                          for t in thrs]))
+
+
+def image_ap50(dt: Detections, gt: Detections) -> float:
+    """Per-image AP50 — the paper's reward signal v_t."""
+    return average_precision({0: dt}, {0: gt}, iou_thr=0.5)

@@ -1,0 +1,50 @@
+"""The 12 ensemble pathways: {affirmative,consensus,unanimous} voting x
+{none,nms,soft-nms,wbf} ablation.  Paper default: Affirmative-WBF."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.ensemble.ablation import nms, soft_nms, wbf
+from repro.ensemble.boxes import Detections
+from repro.ensemble.voting import group_detections, vote_filter
+
+VOTING = ("affirmative", "consensus", "unanimous")
+ABLATION = ("none", "nms", "softnms", "wbf")
+PATHWAYS = [(v, a) for v in VOTING for a in ABLATION]
+DEFAULT = ("affirmative", "wbf")
+
+
+def ensemble_detections(per_provider: Sequence[Detections], *,
+                        voting: str = "affirmative", ablation: str = "wbf",
+                        iou_thr: float = 0.5,
+                        use_kernel: bool = False) -> Detections:
+    """Merge detections from the selected providers (paper Sec. IV-D).
+
+    ``per_provider[i]`` is provider i's detections for one image, with
+    labels already mapped to canonical group ids by the word-grouping stage.
+    """
+    tagged = []
+    for i, d in enumerate(per_provider):
+        t = Detections(d.boxes, d.scores, d.labels)
+        import numpy as np
+        t.providers = np.full(len(t), i, np.int32)
+        tagged.append(t)
+    merged = Detections.concat(tagged)
+    if len(merged) == 0:
+        return merged
+    groups = group_detections(merged, iou_thr=iou_thr, use_kernel=use_kernel)
+    groups = vote_filter(merged, groups, method=voting,
+                         n_selected=len(per_provider))
+    if ablation == "wbf":
+        return wbf(merged, groups, n_models=len(per_provider))
+    import numpy as np
+    if not groups:
+        return Detections.empty()
+    kept = merged.take(np.concatenate(groups))
+    if ablation == "none":
+        return kept
+    if ablation == "nms":
+        return nms(kept, iou_thr=iou_thr)
+    if ablation == "softnms":
+        return soft_nms(kept)
+    raise ValueError(ablation)

@@ -1,0 +1,68 @@
+"""Voting stage (paper Sec. IV-D): group then filter.
+
+Detections from the selected providers are clustered into groups G =
+[g_1..g_r]: two detections join the same group iff IoU > 0.5 and same
+canonical label.  Groups are then kept by the voting rule:
+
+  affirmative — keep every group (any provider's say-so counts)
+  consensus   — keep groups seen by > N/2 distinct providers
+  unanimous   — keep groups seen by all N selected providers
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.ensemble.boxes import Detections, iou_matrix
+
+IOU_GROUP_THR = 0.5
+
+
+def group_detections(dets: Detections, *, iou_thr: float = IOU_GROUP_THR,
+                     use_kernel: bool = False) -> List[np.ndarray]:
+    """Greedy clustering by (label, IoU>thr).  Returns index arrays.
+
+    Detections are visited in descending score order; each joins the first
+    existing group whose *representative* (highest-score member) matches.
+    ``use_kernel=True`` routes the pairwise IoU through the Pallas kernel
+    wrapper (interpret mode on CPU).
+    """
+    n = len(dets)
+    if n == 0:
+        return []
+    order = np.argsort(-dets.scores, kind="stable")
+    if use_kernel:
+        from repro.kernels.iou_matrix.ops import iou_matrix_op
+        iou = np.asarray(iou_matrix_op(dets.boxes, dets.boxes))
+    else:
+        iou = iou_matrix(dets.boxes, dets.boxes)
+    groups: List[List[int]] = []
+    reps: List[int] = []
+    for i in order:
+        placed = False
+        for gi, rep in enumerate(reps):
+            if dets.labels[i] == dets.labels[rep] and iou[i, rep] > iou_thr:
+                groups[gi].append(int(i))
+                placed = True
+                break
+        if not placed:
+            groups.append([int(i)])
+            reps.append(int(i))
+    return [np.asarray(g, np.int64) for g in groups]
+
+
+def vote_filter(dets: Detections, groups: List[np.ndarray], *, method: str,
+                n_selected: int) -> List[np.ndarray]:
+    if method == "affirmative":
+        return groups
+    out = []
+    for g in groups:
+        provs = dets.providers[g] if dets.providers is not None else \
+            np.zeros(len(g))
+        distinct = len(np.unique(provs))
+        if method == "consensus" and distinct > n_selected / 2.0:
+            out.append(g)
+        elif method == "unanimous" and distinct == n_selected:
+            out.append(g)
+    return out

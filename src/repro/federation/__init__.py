@@ -1,0 +1,5 @@
+from repro.federation.vocab import WordGrouper, COCO_TEMPLATE  # noqa: F401
+from repro.federation.providers import ProviderProfile, default_providers, \
+    scalability_providers  # noqa: F401
+from repro.federation.traces import TraceSet, generate_traces  # noqa: F401
+from repro.federation.env import ArmolEnv  # noqa: F401

@@ -1,0 +1,116 @@
+"""Gym-style trace-driven environment for MLaaS federation (paper Sec. III).
+
+State  : feature vector of the current image (conv extractor, "MobileNet"
+         role), precomputed for the whole trace set.
+Action : binary provider-subset vector a in {0,1}^N (a != 0).
+Reward : r_t = v_t + beta * c_t  with v_t = per-image AP50 of the ensembled
+         prediction and c_t the summed provider fees (milli-USD);
+         r_t = -1 when the selection returns no predictions (Eq. 5).
+Modes  : "gt"   — AP against ground truth (Armol-w/ gt)
+         "nogt" — AP against the pseudo ground truth: the ensemble of ALL
+                  providers' predictions (Armol-w/o gt).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.networks import extract_features, init_feature_extractor
+from repro.ensemble.boxes import Detections
+from repro.ensemble.metrics import image_ap50
+from repro.ensemble.pipeline import ensemble_detections
+from repro.federation.traces import TraceSet
+
+FEATURE_SEED = 7
+
+
+class ArmolEnv:
+    def __init__(self, traces: TraceSet, *, mode: str = "gt",
+                 beta: float = 0.0, voting: str = "affirmative",
+                 ablation: str = "wbf", train_frac: float = 0.7,
+                 seed: int = 0, feat_dim: int = 64):
+        assert mode in ("gt", "nogt")
+        self.traces = traces
+        self.mode = mode
+        self.beta = beta
+        self.voting = voting
+        self.ablation = ablation
+        self.rng = np.random.default_rng(seed)
+        self.n_providers = traces.n_providers
+        self.costs = traces.costs()
+
+        # --- state features (precomputed once, like the paper's MobileNet):
+        # conv-stack embedding + category-sensitive matched-filter responses
+        # (the "pretrained backbone" signal; see traces.category_features)
+        fkey = jax.random.PRNGKey(FEATURE_SEED)
+        fparams = init_feature_extractor(fkey, feat_dim=feat_dim)
+        feats = jax.vmap(lambda im: extract_features(fparams, im))(
+            traces.images)
+        from repro.federation.traces import category_features
+        cat_feats = category_features(traces.images, len(traces.categories))
+        self.features = np.concatenate(
+            [np.asarray(feats, np.float32), cat_feats], axis=1)
+        self.state_dim = self.features.shape[1]
+
+        n = len(traces)
+        split = int(n * train_frac)
+        self.train_idx = np.arange(0, split)
+        self.test_idx = np.arange(split, n)
+
+        # pseudo ground truth cache (ensemble of all providers)
+        self._pseudo: Dict[int, Detections] = {}
+        self._order: np.ndarray = self.train_idx
+        self._t = 0
+
+    # ------------------------------------------------------------------
+    def pseudo_gt(self, img_idx: int) -> Detections:
+        if img_idx not in self._pseudo:
+            self._pseudo[img_idx] = ensemble_detections(
+                self.traces.dets[img_idx], voting=self.voting,
+                ablation=self.ablation)
+        return self._pseudo[img_idx]
+
+    def reference_gt(self, img_idx: int) -> Detections:
+        if self.mode == "gt":
+            return self.traces.gts[img_idx]
+        return self.pseudo_gt(img_idx)
+
+    def ensemble_for(self, img_idx: int, action: np.ndarray) -> Detections:
+        sel = [self.traces.dets[img_idx][i]
+               for i in range(self.n_providers) if action[i] > 0.5]
+        if not sel:
+            return Detections.empty()
+        return ensemble_detections(sel, voting=self.voting,
+                                   ablation=self.ablation)
+
+    def evaluate_action(self, img_idx: int,
+                        action: np.ndarray) -> Tuple[float, float, float]:
+        """Returns (reward, v=AP50, cost_milli_usd) for one image."""
+        ens = self.ensemble_for(img_idx, action)
+        cost = float(np.sum(self.costs * (action > 0.5)))
+        if len(ens) == 0:
+            return -1.0, 0.0, cost
+        v = image_ap50(ens, self.reference_gt(img_idx))
+        return v + self.beta * cost, v, cost
+
+    # ------------------------------------------------------------------
+    def reset(self, *, split: str = "train",
+              shuffle: bool = True) -> np.ndarray:
+        idx = self.train_idx if split == "train" else self.test_idx
+        self._order = self.rng.permutation(idx) if shuffle else idx.copy()
+        self._t = 0
+        return self.features[self._order[0]]
+
+    @property
+    def current_image(self) -> int:
+        return int(self._order[self._t])
+
+    def step(self, action: np.ndarray):
+        img = self.current_image
+        reward, v, cost = self.evaluate_action(img, action)
+        self._t += 1
+        done = self._t >= len(self._order)
+        nxt = self.features[self._order[min(self._t, len(self._order) - 1)]]
+        return nxt, reward, done, {"ap50": v, "cost": cost, "image": img}

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the system's compute hot-spots.
+# Each kernel package: <name>/kernel.py (pl.pallas_call + BlockSpec),
+# <name>/ops.py (jit'd public wrapper), <name>/ref.py (pure-jnp oracle).
+#
+#   iou_matrix      — pairwise box IoU tiles (ensemble/word-grouping hot-spot,
+#                     the paper's voting stage is O(r^2) IoU tests per image)
+#   flash_attention — online-softmax blocked attention (32k prefill hot-spot;
+#                     causal + sliding-window)
+#   ssd_scan        — Mamba-2 SSD chunk scan with VMEM-carried chunk state

@@ -1,0 +1,108 @@
+"""Blocked online-softmax (flash) attention, Pallas TPU.
+
+Grid layout: (batch, heads, num_q_blocks, num_kv_blocks) with the KV block
+dimension INNERMOST and sequential ("arbitrary" TPU grid semantics), so the
+running-softmax state for one query block — row max m, row sum l, and the
+f32 output accumulator — lives in VMEM scratch that persists across the KV
+sweep.  Block shapes: q/o tiles (BQ, hd), k/v tiles (BK, hd); with
+BQ=BK=128 and hd=128 the working set is 4 tiles x 64 KiB + the (128,128)
+f32 score tile ~= 0.4 MiB — far under VMEM, leaving room for Mosaic's
+double buffering of the k/v streams.  The MXU sees two (BQ,hd)x(hd,BK)
+contractions per step.
+
+Causal and sliding-window masks are applied from global indices; fully
+masked KV blocks are skipped with pl.when (they still DMA, the roofline win
+on TPU comes from the skipped MXU work — a production variant would also
+prune the grid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, block_q: int,
+                  block_k: int, num_kv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    # skip fully-masked KV blocks (strictly above the causal diagonal)
+    live = (iq * block_q + block_q - 1 >= ik * block_k) if causal \
+        else (ik >= 0)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)             # (BK, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] \
+            + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q/k/v: (B, H, S, hd) -> (B, H, S, hd).  Softmax scale = hd^-0.5."""
+    B, H, S, hd = q.shape
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    n_q = pl.cdiv(S, bq)
+    n_k = pl.cdiv(S, bk)
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, num_kv=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,32 @@
+"""Public flash-attention wrapper.
+
+Accepts the model-side (B, S, H, hd) layout with GQA (K <= H kv heads),
+broadcasts KV groups, and dispatches to the Pallas kernel (interpret mode
+on CPU).  hd should be a multiple of 128 lanes on real TPU; interpret mode
+accepts anything.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B, S, H, hd); k/v: (B, S, K, hd) with H % K == 0."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = jnp.moveaxis(q, 2, 1)     # (B, H, S, hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    interpret = jax.default_backend() == "cpu"
+    out = flash_attention_pallas(qt, kt, vt, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: exact softmax attention with causal/window masks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q/k/v: (B, H, S, hd) -> (B, H, S, hd), fp32 softmax."""
+    B, H, S, hd = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= (i - j) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v)

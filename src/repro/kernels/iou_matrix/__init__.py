@@ -1,0 +1,1 @@
+from repro.kernels.iou_matrix.ops import iou_matrix_op  # noqa: F401

@@ -1,0 +1,20 @@
+"""Public wrapper: picks Pallas-on-TPU or interpret-on-CPU automatically."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.iou_matrix.kernel import iou_matrix_pallas
+
+
+def iou_matrix_op(boxes_a, boxes_b, *, block_m: int = 128,
+                  block_n: int = 512) -> jnp.ndarray:
+    """(M,4) x (N,4) -> (M,N) IoU via the Pallas kernel (interpret on CPU)."""
+    a = jnp.asarray(boxes_a, jnp.float32).reshape(-1, 4)
+    b = jnp.asarray(boxes_b, jnp.float32).reshape(-1, 4)
+    if a.shape[0] == 0 or b.shape[0] == 0:
+        return jnp.zeros((a.shape[0], b.shape[0]), jnp.float32)
+    interpret = jax.default_backend() == "cpu"
+    return iou_matrix_pallas(a, b, block_m=block_m, block_n=block_n,
+                             interpret=interpret)

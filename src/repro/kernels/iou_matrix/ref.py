@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the IoU kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def iou_matrix_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    x1 = jnp.maximum(a[:, None, 0], b[None, :, 0])
+    y1 = jnp.maximum(a[:, None, 1], b[None, :, 1])
+    x2 = jnp.minimum(a[:, None, 2], b[None, :, 2])
+    y2 = jnp.minimum(a[:, None, 3], b[None, :, 3])
+    inter = jnp.maximum(x2 - x1, 0.0) * jnp.maximum(y2 - y1, 0.0)
+    area = lambda bb: (jnp.maximum(bb[:, 2] - bb[:, 0], 0.0)  # noqa: E731
+                       * jnp.maximum(bb[:, 3] - bb[:, 1], 0.0))
+    union = area(a)[:, None] + area(b)[None, :] - inter
+    return jnp.where(union > 0.0, inter / jnp.maximum(union, 1e-12), 0.0)

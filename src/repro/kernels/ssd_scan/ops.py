@@ -1,0 +1,29 @@
+"""Public SSD wrapper matching the model-side (B, S, nh, hd) layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+
+
+def ssd_scan(xh, dt, A, Bmat, Cmat, *, chunk: int = 128):
+    """Same contract as models.ssm.ssd_chunked (y only).
+
+    xh: (B, S, nh, hd); dt: (B, S, nh) f32; A: (nh,) f32 negative;
+    Bmat/Cmat: (B, S, N).
+    """
+    B, S, nh, hd = xh.shape
+    N = Bmat.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    NC = S // Q
+    x = jnp.moveaxis(xh, 2, 1).reshape(B, nh, NC, Q, hd)
+    dth = jnp.moveaxis(dt.astype(jnp.float32), 2, 1).reshape(B, nh, NC, Q)
+    dta = dth * A[None, :, None, None]
+    Bm = Bmat.astype(jnp.float32).reshape(B, NC, Q, N)
+    Cm = Cmat.astype(jnp.float32).reshape(B, NC, Q, N)
+    interpret = jax.default_backend() == "cpu"
+    y = ssd_scan_pallas(x.astype(jnp.float32), dta, dth, Bm, Cm,
+                        interpret=interpret)
+    return jnp.moveaxis(y.reshape(B, nh, S, hd), 1, 2)

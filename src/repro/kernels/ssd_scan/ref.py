@@ -1,0 +1,40 @@
+"""Oracles for the SSD kernel.
+
+``ssd_ref`` mirrors models.ssm.ssd_chunked (the production jnp path);
+``ssd_naive`` is the O(S^2)-free sequential recurrence — the ground truth
+both the kernel and the chunked path must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(xh, dt, A, Bmat, Cmat, chunk: int):
+    y, final = ssd_chunked(xh, dt, A, Bmat, Cmat, chunk)
+    return y
+
+
+def ssd_naive(xh, dt, A, Bmat, Cmat):
+    """Token-by-token recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t."""
+    B, S, nh, hd = xh.shape
+    N = Bmat.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                 # (B,nh,hd),(B,nh),(B,N),(B,N)
+        decay = jnp.exp(dt_t * A)                 # (B,nh)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt_t, b_t, x_t)
+        h = decay[:, :, None, None] * h + upd
+        y_t = jnp.einsum("bn,bhpn->bhp", c_t, h)
+        return h, y_t
+
+    h0 = jnp.zeros((B, nh, hd, N), f32)
+    xs = (jnp.moveaxis(xh.astype(f32), 1, 0),
+          jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(Bmat.astype(f32), 1, 0),
+          jnp.moveaxis(Cmat.astype(f32), 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)                 # (B,S,nh,hd)

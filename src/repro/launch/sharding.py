@@ -1,0 +1,237 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs.
+
+Rule dispatch is by parameter *name* (the last dict key), with divisibility
+guards so e.g. GQA archs with num_kv_heads=8 < model-axis=16 fall back to
+replicated KV projections instead of splitting heads across shards.
+Leading stacked-layer dims (from lax.scan stacking — 1 for most archs, 2
+for VLM/Zamba super-blocks) are never sharded.
+
+Modes:
+  tp  — tensor-parallel only (serving; weights replicated over "data")
+  2d  — FSDP x TP (training; the non-"model" big dim shards over "data")
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# parameter names that column-parallel shard (output dim over "model")
+# NOTE: wq_a (MLA query down-projection, d x q_lora) is deliberately NOT
+# column-sharded: sharding q_lora makes the wq_b contraction partial-summed
+# and GSPMD sinks that psum into the (B, H, S, S) attention scores — four
+# full-score all-reduces, 99% of DeepSeek prefill collective traffic
+# (see EXPERIMENTS.md §Perf iteration 2).  The projection is tiny; keep it
+# replicated.
+_COL = {"wq", "w_gate", "w_up", "in_z", "in_x", "wq_b"}
+# kv projections: column-parallel only if num_kv_heads divides the axis
+_COL_KV = {"wk", "wv"}
+# MLA latent-side per-head expansions: column over heads
+_COL_MLA = {"wk_b", "wv_b"}
+# row-parallel (input dim over "model")
+_ROW = {"wo", "w_down", "out_proj"}
+# expert-parallel 3-D weights (expert dim over "model")
+_EXPERT = {"w_gate", "w_up", "w_down"}
+_BIAS_COL = {"bq"}
+_BIAS_KV = {"bk", "bv"}
+
+
+def _name_of(path) -> str:
+    for entry in reversed(path):
+        k = getattr(entry, "key", None)
+        if k is None:
+            k = getattr(entry, "name", None)
+        if isinstance(k, str):
+            return k
+    return ""
+
+
+def _path_names(path):
+    out = []
+    for entry in path:
+        k = getattr(entry, "key", getattr(entry, "name", None))
+        if isinstance(k, str):
+            out.append(k)
+    return out
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_pspec(path, leaf, cfg: ArchConfig, *, model_size: int,
+                data_size: int, mode: str = "2d") -> P:
+    """PartitionSpec for one parameter leaf."""
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    lead = len(shape)  # num leading (stacked/scan) dims before the base shape
+    fsdp = mode == "2d"
+
+    def base(*spec):
+        """Pad with None for the stacked leading dims."""
+        pad = (None,) * (len(shape) - len(spec))
+        return P(*pad, *spec)
+
+    in_moe = "moe" in names and "shared" not in names
+    if name == "embed":
+        a = "model" if _div(shape[0], model_size) else None
+        b = "data" if fsdp and _div(shape[1], data_size) else None
+        return P(a, b)
+    if name == "unembed":
+        a = "data" if fsdp and _div(shape[0], data_size) else None
+        b = "model" if _div(shape[1], model_size) else None
+        return P(a, b)
+    if in_moe and name in _EXPERT and len(shape) >= 3:
+        # (..., E, a, b): experts over "model"
+        e_ok = _div(shape[-3], model_size)
+        d_ok = fsdp and _div(shape[-2], data_size)
+        return base("model" if e_ok else None, "data" if d_ok else None, None)
+    if name == "router":
+        return base("data" if fsdp and _div(shape[-2], data_size) else None,
+                    None)
+    if name in _COL:
+        a = "data" if fsdp and _div(shape[-2], data_size) else None
+        b = "model" if _div(shape[-1], model_size) else None
+        return base(a, b)
+    if name in _COL_KV:
+        ok = _div(cfg.num_kv_heads, model_size)
+        a = "data" if fsdp and _div(shape[-2], data_size) else None
+        return base(a, "model" if ok else None)
+    if name in _COL_MLA:
+        ok = _div(cfg.num_heads, model_size)
+        a = "data" if fsdp and _div(shape[-2], data_size) else None
+        return base(a, "model" if ok else None)
+    if name in _ROW:
+        a = "model" if _div(shape[-2], model_size) else None
+        b = "data" if fsdp and _div(shape[-1], data_size) else None
+        return base(a, b)
+    if name in _BIAS_COL:
+        return base("model" if _div(shape[-1], model_size) else None)
+    if name in _BIAS_KV:
+        ok = _div(cfg.num_kv_heads, model_size)
+        return base("model" if ok else None)
+    if name == "conv_x":            # (..., d_inner, d_conv)
+        return base("model" if _div(shape[-2], model_size) else None, None)
+    if name == "conv_x_b":          # (..., d_inner)
+        return base("model" if _div(shape[-1], model_size) else None)
+    # everything else (norms, gates, conv_bc, in_bc, in_dt, A_log, D, ...)
+    return P(*(None,) * len(shape))
+
+
+def params_shardings(mesh, params_shapes, cfg: ArchConfig, mode: str = "2d"):
+    msz = mesh.shape["model"]
+    dsz = mesh.shape["data"]
+
+    def one(path, leaf):
+        spec = param_pspec(path, leaf, cfg, model_size=msz, data_size=dsz,
+                           mode=mode)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Activations / batch / cache
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh, global_batch: int) -> P:
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if _div(global_batch, total):
+        return P(axes)
+    if _div(global_batch, mesh.shape["data"]) and len(axes) > 1:
+        return P("data")
+    return P(None)
+
+
+def batch_shardings(mesh, batch_shapes, global_batch: int):
+    bp = batch_pspec(mesh, global_batch)
+
+    def one(leaf):
+        pad = (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*bp, *pad))
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_pspec(path, leaf, cfg: ArchConfig, *, model_size: int,
+                data_size: int, global_batch: int) -> P:
+    """KV/state cache sharding.
+
+    Baseline policy: batch over "data" when divisible; the head dim over
+    "model" when divisible, OTHERWISE the sequence dim over "model"
+    (sequence-sharded cache — GSPMD inserts the softmax-reduction
+    collectives).  SSM states shard heads over "model".
+    """
+    name = _name_of(path)
+    shape = leaf.shape
+    if name == "pos" or len(shape) == 0:
+        return P()
+    b_ok = _div(global_batch, data_size)
+
+    def with_batch(bidx, rest):
+        spec = [None] * len(shape)
+        if b_ok:
+            spec[bidx] = "data"
+        for i, ax in rest.items():
+            spec[i] = ax
+        return P(*spec)
+
+    if name in ("k", "v"):
+        # (..., B, W, K, hd)
+        bidx = len(shape) - 4
+        if _div(cfg.num_kv_heads, model_size):
+            return with_batch(bidx, {len(shape) - 2: "model"})
+        return with_batch(bidx, {len(shape) - 3: "model"})
+    if name in ("cross_k", "cross_v"):
+        bidx = len(shape) - 4
+        if _div(cfg.num_kv_heads, model_size):
+            return with_batch(bidx, {len(shape) - 2: "model"})
+        return with_batch(bidx, {})
+    if name in ("latent", "latent0", "k_rope", "k_rope0"):
+        # (L, B, W, r): sequence-sharded latent cache
+        bidx = len(shape) - 3
+        return with_batch(bidx, {len(shape) - 2: "model"})
+    if name == "ssm":
+        # (..., B, nh, hd, N)
+        bidx = len(shape) - 4
+        d_inner, nh, _ = _ssm_dims(cfg)
+        if _div(nh, model_size):
+            return with_batch(bidx, {len(shape) - 3: "model"})
+        return with_batch(bidx, {})
+    if name in ("conv_x",):
+        bidx = len(shape) - 3
+        d_inner, _, _ = _ssm_dims(cfg)
+        if _div(d_inner, model_size):
+            return with_batch(bidx, {len(shape) - 2: "model"})
+        return with_batch(bidx, {})
+    if name in ("conv_bc",):
+        bidx = len(shape) - 3
+        return with_batch(bidx, {})
+    return P(*(None,) * len(shape))
+
+
+def _ssm_dims(cfg):
+    from repro.models import ssm as ssm_lib
+    return ssm_lib.dims(cfg) if cfg.ssm is not None else (0, 0, 0)
+
+
+def cache_shardings(mesh, cache_shapes, cfg: ArchConfig, global_batch: int):
+    msz, dsz = mesh.shape["model"], mesh.shape["data"]
+
+    def one(path, leaf):
+        spec = cache_pspec(path, leaf, cfg, model_size=msz, data_size=dsz,
+                           global_batch=global_batch)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def replicated(mesh, shapes):
+    def one(leaf):
+        return NamedSharding(mesh, P(*(None,) * len(leaf.shape)))
+    return jax.tree.map(one, shapes)

@@ -1,0 +1,103 @@
+"""ShapeDtypeStruct input specs for every (architecture x input shape).
+
+Nothing here allocates device memory: params/opt/cache structures come from
+``jax.eval_shape`` and inputs are hand-built ShapeDtypeStructs with
+NamedShardings attached — the shannon/kernels dry-run pattern.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import sharding as shd
+from repro.models.model import Model, build_model
+from repro.training.train_step import TrainState, init_train_state, \
+    make_train_step
+
+# serving weights: TP-only if bf16 params fit under this per-chip budget
+TP_BYTES_BUDGET = 8 * 1024 ** 3
+
+
+def serve_param_mode(cfg: ArchConfig, model_size: int) -> str:
+    per_chip = cfg.param_count() * 2 / model_size
+    return "tp" if per_chip <= TP_BYTES_BUDGET else "2d"
+
+
+def batch_struct(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((B, S), jnp.int32),
+             "labels": sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = sds((B, cfg.num_image_tokens, cfg.d_vision),
+                                    jnp.float32)
+    if cfg.family == "audio":
+        batch["audio_frames"] = sds((B, cfg.num_audio_frames, cfg.d_model),
+                                    jnp.float32)
+    return batch
+
+
+def _attach(shapes, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def build_dryrun(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                 remat: bool = True,
+                 param_mode: str = "") -> Tuple[Callable, Tuple]:
+    """Returns (fn, arg_specs) ready for jax.jit(fn).lower(*arg_specs)."""
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        mode = param_mode or "2d"
+        state_shapes = jax.eval_shape(
+            lambda k: init_train_state(model, k), key)
+        pshard = shd.params_shardings(mesh, state_shapes.params, cfg, mode)
+        oshard = TrainState(
+            params=pshard,
+            opt=type(state_shapes.opt)(
+                step=shd.replicated(mesh, state_shapes.opt.step),
+                mu=shd.params_shardings(mesh, state_shapes.opt.mu, cfg, mode),
+                nu=shd.params_shardings(mesh, state_shapes.opt.nu, cfg,
+                                        mode)))
+        state_specs = _attach(state_shapes, oshard)
+        bshapes = batch_struct(cfg, B, S)
+        bspecs = _attach(bshapes, shd.batch_shardings(mesh, bshapes, B))
+        import os
+        loss_chunks = int(os.environ.get("REPRO_LOSS_CHUNKS", "0"))
+        step_fn = make_train_step(model, remat=remat,
+                                  loss_chunks=loss_chunks)
+        return step_fn, (state_specs, bspecs)
+
+    mode = param_mode or serve_param_mode(cfg, mesh.shape["model"])
+    params_shapes = jax.eval_shape(model.init, key)
+    pspecs = _attach(params_shapes,
+                     shd.params_shardings(mesh, params_shapes, cfg, mode))
+
+    if shape.kind == "prefill":
+        bshapes = batch_struct(cfg, B, S)
+        bshapes.pop("labels")
+        bspecs = _attach(bshapes, shd.batch_shardings(mesh, bshapes, B))
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, S)
+        return prefill_fn, (pspecs, bspecs)
+
+    # decode: one new token against a seq_len cache
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(None, B, S, None))
+    cspecs = _attach(cache_shapes,
+                     shd.cache_shardings(mesh, cache_shapes, cfg, B))
+    tok = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32,
+        sharding=shd.batch_shardings(
+            mesh, jax.ShapeDtypeStruct((B, 1), jnp.int32), B))
+
+    def decode_fn(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return decode_fn, (pspecs, cspecs, tok)

@@ -1,0 +1,66 @@
+"""Provider-side LM training driver.
+
+Runs a real (reduced or full) architecture with the synthetic data pipeline
+on whatever devices exist.  On the CPU container use ``--reduced`` (the
+full configs are exercised via launch.dryrun instead).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --reduced --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.store import save_pytree
+from repro.configs.base import get_arch
+from repro.data.pipeline import synthetic_lm_batches
+from repro.models.model import build_model
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg, dtype=jnp.float32 if args.reduced else None)
+    state = init_train_state(model, jax.random.PRNGKey(args.seed))
+    n_params = sum(p.size for p in jax.tree.leaves(state.params))
+    print(f"[train] {cfg.name} ({'reduced' if args.reduced else 'full'}): "
+          f"{n_params / 1e6:.1f}M params, {len(jax.devices())} device(s)")
+
+    step_fn = jax.jit(make_train_step(model, peak_lr=args.lr,
+                                      total_steps=args.steps))
+    data = synthetic_lm_batches(cfg, args.batch, args.seq, seed=args.seed)
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        state, metrics = step_fn(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"  step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"({(time.time() - t0) / (step + 1):.2f}s/step)")
+    if args.ckpt:
+        save_pytree(args.ckpt, state.params)
+        print(f"[train] saved params to {args.ckpt}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

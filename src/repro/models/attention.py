@@ -1,0 +1,302 @@
+"""Attention: GQA (full / sliding-window / ring-cache decode), cross-attn, MLA.
+
+Conventions
+-----------
+activations  x: (B, S, d_model)
+q            : (B, S, H, hd)
+kv cache     : k/v (B, S_cache, K, hd); keys stored *already RoPE'd*.
+MLA cache    : latent (B, S, kv_lora) + k_rope (B, S, rope_dim).
+Decode steps take a scalar ``pos`` (same position across the batch —
+static batching; the continuous-batching scheduler lives in serving/).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.models.layers import apply_norm, apply_rope, dense_init, init_norm
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class AttnSpec:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_model: int
+    rope_theta: float
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    norm: str = "rmsnorm"
+
+    @staticmethod
+    def from_cfg(cfg: ArchConfig) -> "AttnSpec":
+        return AttnSpec(cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+                        cfg.d_model, cfg.rope_theta, cfg.qkv_bias, cfg.qk_norm,
+                        cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_attention(key, spec: AttnSpec, dtype):
+    ks = jax.random.split(key, 6)
+    H, K, hd, d = spec.num_heads, spec.num_kv_heads, spec.head_dim, spec.d_model
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype),
+        "wk": dense_init(ks[1], (d, K * hd), dtype),
+        "wv": dense_init(ks[2], (d, K * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    if spec.qk_norm:
+        p["q_norm"] = init_norm(ks[4], hd, "rmsnorm", dtype)
+        p["k_norm"] = init_norm(ks[5], hd, "rmsnorm", dtype)
+    return p
+
+
+def _project_qkv(p, x, spec: AttnSpec, positions):
+    B, S, _ = x.shape
+    H, K, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if spec.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    q = apply_rope(q, positions, spec.rope_theta)
+    k = apply_rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, num_kv_heads):
+    """q: (B,S,H,hd), k/v: (B,T,K,hd), mask: (B|1, S, T) bool or None."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    q = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_mask(S: int, window: int = 0):
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window:
+        m &= (i - j) < window
+    return m[None]  # (1, S, S)
+
+
+def attention_forward(p, x, positions, spec: AttnSpec, *, causal=True,
+                      window: int = 0, return_cache=False):
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _project_qkv(p, x, spec, positions)
+    mask = causal_mask(x.shape[1], window) if causal else None
+    out = _sdpa(q, k, v, mask, spec.num_kv_heads)
+    y = out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"]
+    if return_cache:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(p, x, pos, cache_k, cache_v, spec: AttnSpec, *,
+                     window: int = 0):
+    """One-token decode. x: (B,1,d); cache_k/v: (B,W,K,hd); pos scalar int32.
+
+    With ``window`` the cache is a ring buffer of size W; otherwise W is the
+    max sequence length and ``pos`` indexes into it directly.
+    """
+    B = x.shape[0]
+    W = cache_k.shape[1]
+    q, k, v = _project_qkv(p, x, spec, jnp.full((B, 1), pos))
+    slot = jnp.mod(pos, W) if window else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    j = jnp.arange(W)
+    if window:
+        valid = (j <= pos) | (pos >= W)
+    else:
+        valid = j <= pos
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, W))
+    out = _sdpa(q, cache_k, cache_v, mask, spec.num_kv_heads)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (VLM image layers, enc-dec)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(key, spec: AttnSpec, d_src: int, dtype, gated=False):
+    ks = jax.random.split(key, 5)
+    H, K, hd, d = spec.num_heads, spec.num_kv_heads, spec.head_dim, spec.d_model
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dtype),
+        "wk": dense_init(ks[1], (d_src, K * hd), dtype),
+        "wv": dense_init(ks[2], (d_src, K * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    if gated:
+        p["gate"] = jnp.zeros((), dtype)
+    return p
+
+
+def cross_kv(p, src, spec: AttnSpec):
+    """Precompute cross K/V from source embeddings (B, T, d_src)."""
+    B, T, _ = src.shape
+    K, hd = spec.num_kv_heads, spec.head_dim
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if spec.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k.reshape(B, T, K, hd), v.reshape(B, T, K, hd)
+
+
+def cross_attention_forward(p, x, kv: Tuple, spec: AttnSpec):
+    B, S, _ = x.shape
+    H, hd = spec.num_heads, spec.head_dim
+    q = x @ p["wq"]
+    if spec.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, hd)
+    k, v = kv
+    out = _sdpa(q, k, v, None, spec.num_kv_heads)
+    y = out.reshape(B, S, -1) @ p["wo"]
+    if "gate" in p:
+        y = jnp.tanh(p["gate"].astype(jnp.float32)).astype(y.dtype) * y
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent-compressed KV; decode uses weight absorption
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ArchConfig, dtype):
+    m = cfg.mla
+    assert m is not None
+    ks = jax.random.split(key, 8)
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": init_norm(ks[1], m.q_lora_rank, "rmsnorm", dtype),
+        "wq_b": dense_init(ks[2], (m.q_lora_rank, H * qk), dtype),
+        "wkv_a": dense_init(ks[3], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": init_norm(ks[4], m.kv_lora_rank, "rmsnorm", dtype),
+        # stored per-head for decode-side absorption
+        "wk_b": dense_init(ks[5], (m.kv_lora_rank, H * m.qk_nope_head_dim), dtype),
+        "wv_b": dense_init(ks[6], (m.kv_lora_rank, H * m.v_head_dim), dtype),
+        "wo": dense_init(ks[7], (H * m.v_head_dim, d), dtype),
+    }
+
+
+def _mla_q(p, x, m: MLAConfig, H, positions):
+    B, S, _ = x.shape
+    cq = apply_norm(p["q_norm"], x @ p["wq_a"], "rmsnorm")
+    q = (cq @ p["wq_b"]).reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, 10000.0)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, m: MLAConfig, positions):
+    ckv = x @ p["wkv_a"]
+    latent = apply_norm(p["kv_norm"], ckv[..., :m.kv_lora_rank], "rmsnorm")
+    k_rope = ckv[..., None, m.kv_lora_rank:]            # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, 10000.0)[..., 0, :]
+    return latent, k_rope
+
+
+def _score_constraint(s):
+    """§Perf: pin (B, H, S, T) attention scores to (data, model) sharding.
+
+    Without this GSPMD replicates the full fp32 score tensor across the
+    data axis for the MLA two-term score sum (observed on DeepSeek 32k
+    prefill: two (B, H, 32k, 32k) all-reduces = 99% of collective traffic).
+    Enabled via REPRO_MLA_CONSTRAINT=1; no-op without a mesh context.
+    """
+    import os
+    if os.environ.get("REPRO_MLA_CONSTRAINT") != "1":
+        return s
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(
+            s, P("data", "model", None, None))
+    except (ValueError, RuntimeError):
+        return s
+
+
+def mla_forward(p, x, positions, cfg: ArchConfig, *, causal=True,
+                return_cache=False):
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    q_nope, q_rope = _mla_q(p, x, m, H, positions)
+    latent, k_rope = _mla_latent(p, x, m, positions)
+    k_nope = (latent @ p["wk_b"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (latent @ p["wv_b"]).reshape(B, S, H, m.v_head_dim)
+    scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    scores = (_score_constraint(jnp.einsum("bshn,bthn->bhst", q_nope, k_nope))
+              + _score_constraint(
+                  jnp.einsum("bshr,btr->bhst", q_rope, k_rope))
+              ).astype(jnp.float32)
+    scores = _score_constraint(scores) * scale
+    if causal:
+        mask = causal_mask(S)[0]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthv->bshv", w, v).reshape(B, S, -1)
+    y = out @ p["wo"]
+    if return_cache:
+        return y, (latent, k_rope)
+    return y
+
+
+def mla_decode(p, x, pos, cache_latent, cache_krope, cfg: ArchConfig):
+    """Absorbed decode: scores in latent space; cache = (B,W,kv_lora)+(B,W,rope)."""
+    m, H = cfg.mla, cfg.num_heads
+    B = x.shape[0]
+    W = cache_latent.shape[1]
+    positions = jnp.full((B, 1), pos)
+    q_nope, q_rope = _mla_q(p, x, m, H, positions)       # (B,1,H,·)
+    latent, k_rope = _mla_latent(p, x, m, positions)     # (B,1,kv_lora),(B,1,rope)
+    cache_latent = jax.lax.dynamic_update_slice_in_dim(cache_latent, latent, pos, 1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(cache_krope, k_rope, pos, 1)
+    # absorb wk_b into the query:  q_lat[h] = q_nope[h] @ wk_b[:, h, :].T
+    wk_b = p["wk_b"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wk_b)   # (B,1,H,kv_lora)
+    scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    scores = (jnp.einsum("bshl,btl->bhst", q_lat, cache_latent)
+              + jnp.einsum("bshr,btr->bhst", q_rope, cache_krope))
+    scores = scores.astype(jnp.float32) * scale
+    valid = jnp.arange(W) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhst,btl->bshl", w, cache_latent)   # (B,1,H,kv_lora)
+    wv_b = p["wv_b"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshl,lhv->bshv", ctx_lat, wv_b).reshape(B, 1, -1)
+    y = out @ p["wo"]
+    return y, (cache_latent, cache_krope)

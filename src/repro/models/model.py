@@ -1,0 +1,713 @@
+"""Composable model zoo: one ``Model`` facade over six architecture families.
+
+Families:
+  dense   — GQA decoder (command-r-plus, qwen1.5-110b/0.5b, stablelm-12b)
+  moe     — GQA or MLA decoder with MoE FFN (olmoe, deepseek-v2)
+  ssm     — Mamba-2 stack (mamba2-370m)
+  hybrid  — Mamba-2 blocks + one shared attn block every k (zamba2)
+  vlm     — dense decoder + cross-attn image layers (llama-3.2-vision)
+  audio   — encoder-decoder (seamless-m4t); frontend embeddings are stubs
+
+All stacks scan over stacked per-layer params (lax.scan) so the HLO stays
+compact enough to compile 80 dry-run combinations on one CPU core.  Every
+family exposes: init / forward (train) / prefill / decode_step / init_cache.
+Decode caches: full KV, sliding-window ring KV, MLA latent, or SSM state —
+chosen per config ``long_context`` plan and requested max_len.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as att
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import AttnSpec
+from repro.models.layers import (apply_mlp, apply_norm, embed_init, init_mlp,
+                                 init_norm)
+
+PyTree = Any
+
+def _scan(f, init, xs):
+    """lax.scan with env-controlled unroll (REPRO_SCAN_UNROLL).
+
+    The roofline correction (benchmarks/roofline_correct.py) sets a large
+    unroll so XLA inlines the layer bodies and cost_analysis() counts every
+    layer — a plain while-loop body is counted once regardless of trip
+    count, which silently undercounts stacked-layer FLOPs/bytes.
+    """
+    import os
+    unroll = int(os.environ.get("REPRO_SCAN_UNROLL", "1"))
+    return jax.lax.scan(f, init, xs, unroll=unroll)
+
+
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE transformer block
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, dtype, *, layer_is_moe: bool,
+                dense_ff: Optional[int] = None):
+    ks = jax.random.split(key, 4)
+    spec = AttnSpec.from_cfg(cfg)
+    p = {"norm1": init_norm(ks[0], cfg.d_model, cfg.norm, dtype)}
+    if cfg.mla is not None:
+        p["attn"] = att.init_mla(ks[1], cfg, dtype)
+    else:
+        p["attn"] = att.init_attention(ks[1], spec, dtype)
+    if not cfg.parallel_block:
+        p["norm2"] = init_norm(ks[2], cfg.d_model, cfg.norm, dtype)
+    if layer_is_moe:
+        p["moe"] = moe_lib.init_moe(ks[3], cfg.d_model, cfg.moe, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, dense_ff or cfg.d_ff, dtype)
+    return p
+
+
+def _block_forward(p, x, positions, cfg: ArchConfig, *, causal=True,
+                   window: int = 0, return_cache=False):
+    spec = AttnSpec.from_cfg(cfg)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    cache = None
+    if cfg.mla is not None:
+        out = att.mla_forward(p["attn"], h, positions, cfg, causal=causal,
+                              return_cache=return_cache)
+    else:
+        out = att.attention_forward(p["attn"], h, positions, spec,
+                                    causal=causal, window=window,
+                                    return_cache=return_cache)
+    if return_cache:
+        a, cache = out
+    else:
+        a = out
+    aux = jnp.float32(0.0)
+    if cfg.parallel_block:
+        if "moe" in p:
+            m, aux = moe_lib.apply_moe(p["moe"], h, cfg.moe, cfg.act)
+        else:
+            m = apply_mlp(p["mlp"], h, cfg.act)
+        x = x + a + m
+    else:
+        x = x + a
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            m, aux = moe_lib.apply_moe(p["moe"], h2, cfg.moe, cfg.act)
+        else:
+            m = apply_mlp(p["mlp"], h2, cfg.act)
+        x = x + m
+    return (x, aux, cache) if return_cache else (x, aux)
+
+
+def _block_decode(p, x, pos, kcache, vcache, cfg: ArchConfig, *, window: int):
+    spec = AttnSpec.from_cfg(cfg)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if cfg.mla is not None:
+        a, (kcache, vcache) = att.mla_decode(p["attn"], h, pos, kcache,
+                                             vcache, cfg)
+    else:
+        a, (kcache, vcache) = att.attention_decode(p["attn"], h, pos, kcache,
+                                                   vcache, spec, window=window)
+    if cfg.parallel_block:
+        m = apply_mlp(p["mlp"], h, cfg.act) if "mlp" in p else \
+            moe_lib.apply_moe(p["moe"], h, cfg.moe, cfg.act)[0]
+        x = x + a + m
+    else:
+        x = x + a
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            m, _ = moe_lib.apply_moe(p["moe"], h2, cfg.moe, cfg.act)
+        else:
+            m = apply_mlp(p["mlp"], h2, cfg.act)
+        x = x + m
+    return x, kcache, vcache
+
+
+# ---------------------------------------------------------------------------
+# Model facade
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    dtype: Any = jnp.bfloat16
+
+    # ----- construction ----------------------------------------------------
+    def init(self, key) -> PyTree:
+        cfg, dtype = self.cfg, self.dtype
+        kE, kU, kB, kX, kN, kS = jax.random.split(key, 6)
+        params: Dict[str, Any] = {
+            "embed": embed_init(kE, (cfg.vocab_size, cfg.d_model), dtype),
+            "final_norm": init_norm(kN, cfg.d_model, cfg.norm, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = embed_init(kU, (cfg.d_model, cfg.vocab_size),
+                                           dtype)
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            mo = cfg.moe
+            n_dense = mo.first_dense_layers if mo else 0
+            n_main = cfg.num_layers - n_dense
+            if n_dense:
+                params["dense_blocks"] = _stack_init(
+                    kX, n_dense, lambda k: _init_block(
+                        k, cfg, dtype, layer_is_moe=False,
+                        dense_ff=mo.d_ff_dense))
+            params["blocks"] = _stack_init(
+                kB, n_main, lambda k: _init_block(
+                    k, cfg, dtype, layer_is_moe=mo is not None))
+        elif fam == "ssm":
+            def one(k):
+                kk1, kk2 = jax.random.split(k)
+                return {"norm": init_norm(kk1, cfg.d_model, cfg.norm, dtype),
+                        "mamba": ssm_lib.init_mamba_block(kk2, cfg, dtype)}
+            params["blocks"] = _stack_init(kB, cfg.num_layers, one)
+        elif fam == "hybrid":
+            per = cfg.shared_attn_every
+            n_super = cfg.num_layers // per
+
+            def one_super(k):
+                def one(kk):
+                    k1, k2 = jax.random.split(kk)
+                    return {"norm": init_norm(k1, cfg.d_model, cfg.norm, dtype),
+                            "mamba": ssm_lib.init_mamba_block(k2, cfg, dtype)}
+                return _stack_init(k, per, one)
+            params["blocks"] = _stack_init(kB, n_super, one_super)
+            params["shared_attn"] = _init_block(kS, cfg, dtype,
+                                                layer_is_moe=False)
+        elif fam == "vlm":
+            per = cfg.cross_attn_every
+            n_super = cfg.num_layers // per
+            spec = AttnSpec.from_cfg(cfg)
+
+            def one_super(k):
+                k1, k2, k3, k4 = jax.random.split(k, 4)
+                selfs = _stack_init(k1, per - 1, lambda kk: _init_block(
+                    kk, cfg, dtype, layer_is_moe=False))
+                cross = {
+                    "norm1": init_norm(k2, cfg.d_model, cfg.norm, dtype),
+                    "attn": att.init_cross_attention(k3, spec, cfg.d_vision,
+                                                     dtype, gated=True),
+                    "norm2": init_norm(k4, cfg.d_model, cfg.norm, dtype),
+                    "mlp": init_mlp(jax.random.fold_in(k4, 1), cfg.d_model,
+                                    cfg.d_ff, dtype),
+                    "gate_mlp": jnp.zeros((), dtype),
+                }
+                return {"selfs": selfs, "cross": cross}
+            params["blocks"] = _stack_init(kB, n_super, one_super)
+        elif fam == "audio":
+            spec = AttnSpec.from_cfg(cfg)
+
+            def one_enc(k):
+                return _init_block(k, cfg, dtype, layer_is_moe=False)
+
+            def one_dec(k):
+                k1, k2, k3 = jax.random.split(k, 3)
+                p = _init_block(k1, cfg, dtype, layer_is_moe=False)
+                p["norm_x"] = init_norm(k2, cfg.d_model, cfg.norm, dtype)
+                p["cross"] = att.init_cross_attention(k3, spec, cfg.d_model,
+                                                      dtype)
+                return p
+            params["enc_blocks"] = _stack_init(kX, cfg.encoder_layers, one_enc)
+            params["blocks"] = _stack_init(kB, cfg.num_layers, one_dec)
+            params["enc_norm"] = init_norm(jax.random.fold_in(kN, 7),
+                                           cfg.d_model, cfg.norm, dtype)
+        else:
+            raise ValueError(fam)
+        return params
+
+    # ----- helpers ----------------------------------------------------------
+    def _logits(self, params, x):
+        x = apply_norm(params["final_norm"], x, self.cfg.norm)
+        w = params.get("unembed")
+        if w is None:
+            w = params["embed"].T
+        return (x @ w).astype(jnp.float32)
+
+    def _window_for(self, max_len: int) -> int:
+        cfg = self.cfg
+        if cfg.long_context == "sliding_window" and max_len > cfg.sliding_window:
+            return cfg.sliding_window
+        return 0
+
+    # ----- training forward --------------------------------------------------
+    def forward(self, params, batch, *, remat: bool = False, window: int = 0,
+                return_hidden: bool = False):
+        """Returns (logits (B,S,V) fp32, aux_loss scalar).
+
+        ``window`` > 0 applies a sliding-window causal mask to the dense
+        self-attention layers (training-time twin of the ring decode cache).
+        ``return_hidden`` skips the unembedding and returns the final-norm
+        hidden states instead (for chunked-loss training, which avoids
+        materialising the full (B, S, V) logits tensor).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        aux_total = jnp.float32(0.0)
+        fam = cfg.family
+
+        if fam in ("dense", "moe"):
+            def body(carry, lp):
+                x, aux = carry
+                x, a = _block_forward(lp, x, positions, cfg, window=window)
+                return (x, aux + a), None
+            body_fn = jax.checkpoint(body) if remat else body
+            if "dense_blocks" in params:
+                (x, aux_total), _ = _scan(
+                    body_fn, (x, aux_total), params["dense_blocks"])
+            (x, aux_total), _ = _scan(body_fn, (x, aux_total),
+                                             params["blocks"])
+        elif fam == "ssm":
+            def body(x, lp):
+                h = apply_norm(lp["norm"], x, cfg.norm)
+                x = x + ssm_lib.mamba_forward(lp["mamba"], h, cfg)
+                return x, None
+            body_fn = jax.checkpoint(body) if remat else body
+            x, _ = _scan(body_fn, x, params["blocks"])
+        elif fam == "hybrid":
+            shared = params["shared_attn"]
+
+            def super_body(x, lp):
+                def inner(x, mp):
+                    h = apply_norm(mp["norm"], x, cfg.norm)
+                    x = x + ssm_lib.mamba_forward(mp["mamba"], h, cfg)
+                    return x, None
+                x, _ = _scan(inner, x, lp)
+                x, _ = _block_forward(shared, x, positions, cfg)
+                return x, None
+            body_fn = jax.checkpoint(super_body) if remat else super_body
+            x, _ = _scan(body_fn, x, params["blocks"])
+        elif fam == "vlm":
+            spec = AttnSpec.from_cfg(cfg)
+            img = batch["image_embeds"].astype(x.dtype)
+
+            def super_body(x, lp):
+                def inner(x, sp):
+                    x, _ = _block_forward(sp, x, positions, cfg)
+                    return x, None
+                x, _ = _scan(inner, x, lp["selfs"])
+                cp = lp["cross"]
+                h = apply_norm(cp["norm1"], x, cfg.norm)
+                kv = att.cross_kv(cp["attn"], img, spec)
+                x = x + att.cross_attention_forward(cp["attn"], h, kv, spec)
+                h2 = apply_norm(cp["norm2"], x, cfg.norm)
+                g = jnp.tanh(cp["gate_mlp"].astype(jnp.float32)).astype(x.dtype)
+                x = x + g * apply_mlp(cp["mlp"], h2, cfg.act)
+                return x, None
+            body_fn = jax.checkpoint(super_body) if remat else super_body
+            x, _ = _scan(body_fn, x, params["blocks"])
+        elif fam == "audio":
+            enc = self._encode(params, batch, remat=remat)
+            spec = AttnSpec.from_cfg(cfg)
+
+            def body(x, lp):
+                x, _ = _block_forward_cross(lp, x, positions, enc, cfg, spec)
+                return x, None
+            body_fn = jax.checkpoint(body) if remat else body
+            x, _ = _scan(body_fn, x, params["blocks"])
+        if return_hidden:
+            x = apply_norm(params["final_norm"], x, self.cfg.norm)
+            return x, aux_total
+        return self._logits(params, x), aux_total
+
+    def unembed(self, params, hidden):
+        """hidden (B, C, d) -> fp32 logits (B, C, V); pairs with
+        forward(return_hidden=True)."""
+        w = params.get("unembed")
+        if w is None:
+            w = params["embed"].T
+        return (hidden @ w).astype(jnp.float32)
+
+    def _encode(self, params, batch, *, remat=False):
+        cfg = self.cfg
+        frames = batch["audio_frames"].astype(self.dtype)
+        B, F, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+        x = frames
+
+        def body(x, lp):
+            x, _ = _block_forward(lp, x, pos, cfg, causal=False)
+            return x, None
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = _scan(body_fn, x, params["enc_blocks"])
+        return apply_norm(params["enc_norm"], x, cfg.norm)
+
+    # ----- caches -------------------------------------------------------------
+    def init_cache(self, params_or_none, batch_size: int, max_len: int,
+                   batch: Optional[dict] = None):
+        """Zero cache pytree for ``decode_step``.  ``params_or_none`` and
+        ``batch`` are only needed for cross-attention archs (to precompute
+        cross-KV); pass None for a pure spec."""
+        cfg, dtype = self.cfg, self.dtype
+        B = batch_size
+        window = self._window_for(max_len)
+        W = window or max_len
+        hd = cfg.resolved_head_dim
+        K = cfg.num_kv_heads
+        cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm", "audio"):
+            if cfg.mla is not None:
+                m = cfg.mla
+                n_moe = cfg.num_layers - cfg.moe.first_dense_layers
+                cache["latent"] = jnp.zeros((n_moe, B, W, m.kv_lora_rank), dtype)
+                cache["k_rope"] = jnp.zeros((n_moe, B, W, m.qk_rope_head_dim),
+                                            dtype)
+                nd = cfg.moe.first_dense_layers
+                if nd:
+                    cache["latent0"] = jnp.zeros((nd, B, W, m.kv_lora_rank),
+                                                 dtype)
+                    cache["k_rope0"] = jnp.zeros(
+                        (nd, B, W, m.qk_rope_head_dim), dtype)
+            else:
+                if fam == "vlm":
+                    n_super = cfg.num_layers // cfg.cross_attn_every
+                    n_self = n_super * (cfg.cross_attn_every - 1)
+                    cache["k"] = jnp.zeros(
+                        (n_super, cfg.cross_attn_every - 1, B, W, K, hd), dtype)
+                    cache["v"] = jnp.zeros_like(cache["k"])
+                    cache["cross_k"] = jnp.zeros(
+                        (n_super, B, cfg.num_image_tokens, K, hd), dtype)
+                    cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+                else:
+                    L = cfg.num_layers
+                    cache["k"] = jnp.zeros((L, B, W, K, hd), dtype)
+                    cache["v"] = jnp.zeros_like(cache["k"])
+                if fam == "audio":
+                    F = cfg.num_audio_frames
+                    cache["cross_k"] = jnp.zeros((cfg.num_layers, B, F, K, hd),
+                                                 dtype)
+                    cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+        elif fam == "ssm":
+            d_inner, nh, d_bc = ssm_lib.dims(cfg)
+            L = cfg.num_layers
+            cache["ssm"] = jnp.zeros((L, B, nh, d_inner // nh,
+                                      cfg.ssm.d_state), jnp.float32)
+            cache["conv_x"] = jnp.zeros((L, B, d_inner, cfg.ssm.d_conv - 1),
+                                        dtype)
+            cache["conv_bc"] = jnp.zeros((L, B, d_bc, cfg.ssm.d_conv - 1),
+                                         dtype)
+        elif fam == "hybrid":
+            d_inner, nh, d_bc = ssm_lib.dims(cfg)
+            per = cfg.shared_attn_every
+            n_super = cfg.num_layers // per
+            cache["ssm"] = jnp.zeros((n_super, per, B, nh, d_inner // nh,
+                                      cfg.ssm.d_state), jnp.float32)
+            cache["conv_x"] = jnp.zeros((n_super, per, B, d_inner,
+                                         cfg.ssm.d_conv - 1), dtype)
+            cache["conv_bc"] = jnp.zeros((n_super, per, B, d_bc,
+                                          cfg.ssm.d_conv - 1), dtype)
+            Wa = min(W, cfg.sliding_window)
+            cache["k"] = jnp.zeros((n_super, B, Wa, K, hd), dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+        # cross-KV fill for real runs
+        if params_or_none is not None and batch is not None:
+            spec = AttnSpec.from_cfg(cfg)
+            if fam == "vlm":
+                img = batch["image_embeds"].astype(dtype)
+                ck, cv = jax.vmap(
+                    lambda lp: att.cross_kv(lp["cross"]["attn"], img, spec)
+                )(params_or_none["blocks"])
+                cache["cross_k"], cache["cross_v"] = ck, cv
+            elif fam == "audio":
+                enc = self._encode(params_or_none, batch)
+                ck, cv = jax.vmap(
+                    lambda lp: att.cross_kv(lp["cross"], enc, spec)
+                )(params_or_none["blocks"])
+                cache["cross_k"], cache["cross_v"] = ck, cv
+        return cache
+
+    # ----- prefill ------------------------------------------------------------
+    def prefill(self, params, batch, max_len: int):
+        """Run the prompt, return (last-token logits (B,V), cache at pos=S)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        window = self._window_for(max_len)
+        W = window or max_len
+        x = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        # cross-KV (vlm/audio) is produced by the scans below; skip the
+        # init_cache fill to avoid computing it twice.
+        cache = self.init_cache(None, B, max_len, None)
+        cache["pos"] = jnp.int32(S)
+        fam = cfg.family
+
+        def place(kv):  # (B,S,K,hd) -> ring-placed (B,W,K,hd)
+            return _ring_place(kv, S, W)
+
+        if fam in ("dense", "moe"):
+            if cfg.mla is not None:
+                def body(x, lp):
+                    x, _, c = _block_forward(lp, x, positions, cfg,
+                                             return_cache=True)
+                    lat, kr = c
+                    return x, (_ring_place(lat, S, W),
+                               _ring_place(kr, S, W))
+                if "dense_blocks" in params:
+                    x, (l0, r0) = _scan(body, x, params["dense_blocks"])
+                    cache["latent0"], cache["k_rope0"] = l0, r0
+                x, (lat, kr) = _scan(body, x, params["blocks"])
+                cache["latent"], cache["k_rope"] = lat, kr
+            else:
+                def body(x, lp):
+                    x, _, (k, v) = _block_forward(lp, x, positions, cfg,
+                                                  window=window,
+                                                  return_cache=True)
+                    return x, (place(k), place(v))
+                x, (ks, vs) = _scan(body, x, params["blocks"])
+                cache["k"], cache["v"] = ks, vs
+        elif fam == "ssm":
+            def body(x, lp):
+                h = apply_norm(lp["norm"], x, cfg.norm)
+                y, st = ssm_lib.mamba_forward(lp["mamba"], h, cfg,
+                                              return_state=True)
+                return x + y, st
+            x, (ssm_states, (cxs, cbcs)) = _scan(body, x,
+                                                        params["blocks"])
+            cache["ssm"], cache["conv_x"], cache["conv_bc"] = \
+                ssm_states, cxs, cbcs
+        elif fam == "hybrid":
+            shared = params["shared_attn"]
+            Wa = cache["k"].shape[2]
+            wina = Wa if Wa < max_len else 0
+
+            def super_body(x, lp):
+                def inner(x, mp):
+                    h = apply_norm(mp["norm"], x, cfg.norm)
+                    y, st = ssm_lib.mamba_forward(mp["mamba"], h, cfg,
+                                                  return_state=True)
+                    return x + y, st
+                x, sts = _scan(inner, x, lp)
+                x, _, (k, v) = _block_forward(shared, x, positions, cfg,
+                                              window=wina, return_cache=True)
+                return x, (sts, (_ring_place(k, S, Wa), _ring_place(v, S, Wa)))
+            x, (sts, kv) = _scan(super_body, x, params["blocks"])
+            cache["ssm"], (cache["conv_x"], cache["conv_bc"]) = sts
+            cache["k"], cache["v"] = kv
+        elif fam == "vlm":
+            spec = AttnSpec.from_cfg(cfg)
+
+            def super_body(x, lp):
+                def inner(x, sp):
+                    x, _, (k, v) = _block_forward(sp, x, positions, cfg,
+                                                  window=window,
+                                                  return_cache=True)
+                    return x, (place(k), place(v))
+                x, kv = _scan(inner, x, lp["selfs"])
+                cp = lp["cross"]
+                ckv = att.cross_kv(cp["attn"], batch["image_embeds"].astype(
+                    x.dtype), spec)
+                h = apply_norm(cp["norm1"], x, cfg.norm)
+                x = x + att.cross_attention_forward(cp["attn"], h, ckv, spec)
+                h2 = apply_norm(cp["norm2"], x, cfg.norm)
+                g = jnp.tanh(cp["gate_mlp"].astype(jnp.float32)).astype(x.dtype)
+                x = x + g * apply_mlp(cp["mlp"], h2, cfg.act)
+                return x, (kv, ckv)
+            x, ((ks, vs), (cks, cvs)) = _scan(super_body, x,
+                                                     params["blocks"])
+            cache["k"], cache["v"] = ks, vs
+            cache["cross_k"], cache["cross_v"] = cks, cvs
+        elif fam == "audio":
+            enc = self._encode(params, batch)
+            spec = AttnSpec.from_cfg(cfg)
+
+            def body(x, lp):
+                ckv = att.cross_kv(lp["cross"], enc, spec)
+                x, (k, v) = _block_forward_cross(lp, x, positions, enc, cfg,
+                                                 spec, window=window,
+                                                 return_cache=True)
+                return x, ((place(k), place(v)), ckv)
+            x, ((ks, vs), (cks, cvs)) = _scan(body, x, params["blocks"])
+            cache["k"], cache["v"] = ks, vs
+            cache["cross_k"], cache["cross_v"] = cks, cvs
+        logits = self._logits(params, x[:, -1:, :])[:, 0, :]
+        return logits, cache
+
+    # ----- decode ---------------------------------------------------------------
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1) -> (logits (B,V) fp32, updated cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        x = params["embed"][tokens]
+        fam = cfg.family
+        window_flag = 0
+        if fam in ("dense", "moe", "vlm", "audio") and cfg.mla is None:
+            W = cache["k"].shape[-3]
+        elif cfg.mla is not None:
+            W = cache["latent"].shape[2]
+        else:
+            W = 0
+        if cfg.long_context == "sliding_window" and W and \
+                W == cfg.sliding_window:
+            window_flag = W
+
+        if fam in ("dense", "moe"):
+            if cfg.mla is not None:
+                def body(x, inp):
+                    lp, lat, kr = inp
+                    h = apply_norm(lp["norm1"], x, cfg.norm)
+                    a, (lat, kr) = att.mla_decode(lp["attn"], h, pos, lat, kr,
+                                                  cfg)
+                    x = x + a
+                    h2 = apply_norm(lp["norm2"], x, cfg.norm)
+                    if "moe" in lp:
+                        m, _ = moe_lib.apply_moe(lp["moe"], h2, cfg.moe,
+                                                 cfg.act)
+                    else:
+                        m = apply_mlp(lp["mlp"], h2, cfg.act)
+                    return x + m, (lat, kr)
+                if "dense_blocks" in params:
+                    x, (l0, r0) = _scan(
+                        body, x, (params["dense_blocks"], cache["latent0"],
+                                  cache["k_rope0"]))
+                    cache["latent0"], cache["k_rope0"] = l0, r0
+                x, (lat, kr) = _scan(
+                    body, x, (params["blocks"], cache["latent"],
+                              cache["k_rope"]))
+                cache["latent"], cache["k_rope"] = lat, kr
+            else:
+                def body(x, inp):
+                    lp, k, v = inp
+                    x, k, v = _block_decode(lp, x, pos, k, v, cfg,
+                                            window=window_flag)
+                    return x, (k, v)
+                x, (ks, vs) = _scan(body, x, (params["blocks"],
+                                                     cache["k"], cache["v"]))
+                cache["k"], cache["v"] = ks, vs
+        elif fam == "ssm":
+            def body(x, inp):
+                lp, st, cx, cbc = inp
+                h = apply_norm(lp["norm"], x, cfg.norm)
+                y, (st, (cx, cbc)) = ssm_lib.mamba_decode(
+                    lp["mamba"], h, (st, (cx, cbc)), cfg)
+                return x + y, (st, cx, cbc)
+            x, (sts, cxs, cbcs) = _scan(
+                body, x, (params["blocks"], cache["ssm"], cache["conv_x"],
+                          cache["conv_bc"]))
+            cache["ssm"], cache["conv_x"], cache["conv_bc"] = sts, cxs, cbcs
+        elif fam == "hybrid":
+            shared = params["shared_attn"]
+            Wa = cache["k"].shape[2]
+            wina = Wa if Wa < 10**9 and Wa == cfg.sliding_window else 0
+
+            def super_body(x, inp):
+                lp, st, cx, cbc, k, v = inp
+
+                def inner(x, minp):
+                    mp, s1, c1, c2 = minp
+                    h = apply_norm(mp["norm"], x, cfg.norm)
+                    y, (s1, (c1, c2)) = ssm_lib.mamba_decode(
+                        mp["mamba"], h, (s1, (c1, c2)), cfg)
+                    return x + y, (s1, c1, c2)
+                x, (st, cx, cbc) = _scan(inner, x, (lp, st, cx, cbc))
+                x, k, v = _block_decode(shared, x, pos, k, v, cfg, window=wina)
+                return x, (st, cx, cbc, k, v)
+            x, (sts, cxs, cbcs, ks, vs) = _scan(
+                super_body, x, (params["blocks"], cache["ssm"],
+                                cache["conv_x"], cache["conv_bc"],
+                                cache["k"], cache["v"]))
+            cache["ssm"], cache["conv_x"], cache["conv_bc"] = sts, cxs, cbcs
+            cache["k"], cache["v"] = ks, vs
+        elif fam == "vlm":
+            spec = AttnSpec.from_cfg(cfg)
+
+            def super_body(x, inp):
+                lp, k, v, ck, cv = inp
+
+                def inner(x, sinp):
+                    sp, k1, v1 = sinp
+                    x, k1, v1 = _block_decode(sp, x, pos, k1, v1, cfg,
+                                              window=window_flag)
+                    return x, (k1, v1)
+                x, (k, v) = _scan(inner, x, (lp["selfs"], k, v))
+                cp = lp["cross"]
+                h = apply_norm(cp["norm1"], x, cfg.norm)
+                x = x + att.cross_attention_forward(cp["attn"], h, (ck, cv),
+                                                    spec)
+                h2 = apply_norm(cp["norm2"], x, cfg.norm)
+                g = jnp.tanh(cp["gate_mlp"].astype(jnp.float32)).astype(x.dtype)
+                x = x + g * apply_mlp(cp["mlp"], h2, cfg.act)
+                return x, (k, v)
+            x, (ks, vs) = _scan(
+                super_body, x, (params["blocks"], cache["k"], cache["v"],
+                                cache["cross_k"], cache["cross_v"]))
+            cache["k"], cache["v"] = ks, vs
+        elif fam == "audio":
+            spec = AttnSpec.from_cfg(cfg)
+
+            def body(x, inp):
+                lp, k, v, ck, cv = inp
+                h = apply_norm(lp["norm1"], x, cfg.norm)
+                a, (k, v) = att.attention_decode(lp["attn"], h, pos, k, v,
+                                                 spec, window=window_flag)
+                x = x + a
+                hx = apply_norm(lp["norm_x"], x, cfg.norm)
+                x = x + att.cross_attention_forward(lp["cross"], hx, (ck, cv),
+                                                    spec)
+                h2 = apply_norm(lp["norm2"], x, cfg.norm)
+                x = x + apply_mlp(lp["mlp"], h2, cfg.act)
+                return x, (k, v)
+            x, (ks, vs) = _scan(
+                body, x, (params["blocks"], cache["k"], cache["v"],
+                          cache["cross_k"], cache["cross_v"]))
+            cache["k"], cache["v"] = ks, vs
+        cache["pos"] = pos + 1
+        logits = self._logits(params, x)[:, 0, :]
+        return logits, cache
+
+
+def _block_forward_cross(lp, x, positions, enc, cfg, spec, *, window=0,
+                         return_cache=False):
+    """Enc-dec decoder block: self-attn + cross-attn + FFN."""
+    h = apply_norm(lp["norm1"], x, cfg.norm)
+    out = att.attention_forward(lp["attn"], h, positions, spec, causal=True,
+                                window=window, return_cache=return_cache)
+    if return_cache:
+        a, kv = out
+    else:
+        a, kv = out, None
+    x = x + a
+    hx = apply_norm(lp["norm_x"], x, cfg.norm)
+    ckv = att.cross_kv(lp["cross"], enc, spec)
+    x = x + att.cross_attention_forward(lp["cross"], hx, ckv, spec)
+    h2 = apply_norm(lp["norm2"], x, cfg.norm)
+    x = x + apply_mlp(lp["mlp"], h2, cfg.act)
+    return (x, kv) if return_cache else (x, jnp.float32(0.0))
+
+
+def _ring_place(kv, S: int, W: int):
+    """Place a (B, S, ...) prefill cache into a (B, W, ...) ring buffer.
+
+    Slot j holds the latest position p < S with p % W == j.
+    """
+    if S == W:
+        return kv
+    if S < W:
+        pad = [(0, 0)] * kv.ndim
+        pad[1] = (0, W - S)
+        return jnp.pad(kv, pad)
+    j = jnp.arange(W)
+    src = (S - 1) - jnp.mod((S - 1) - j, W)
+    return jnp.take(kv, src, axis=1)
+
+
+def _stack_init(key, n: int, init_one):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)
+
+
+def build_model(cfg: ArchConfig, dtype=None) -> Model:
+    d = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype] \
+        if dtype is None else dtype
+    return Model(cfg, d)

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN with grouped, capacity-based one-hot dispatch.
+
+Dispatch follows the GShard/MaxText pattern: tokens are split into groups of
+``GROUP_SIZE``; within each group they are routed to per-expert capacity
+buffers with one-hot dispatch einsums, the expert FFN runs on the
+(G, E, C, d) buffers, and combine weights scatter the outputs back.  With
+experts sharded over the "model" mesh axis this lowers to the expected
+all-to-all / all-gather traffic, and compiled FLOPs track *active* (not
+total) expert compute — which keeps the roofline's MODEL_FLOPS/HLO_FLOPs
+ratio honest.  Grouping bounds the dispatch tensor to
+T × E × C/group ≈ T · top_k · 1.25 · E/E elements instead of T · E · C_full.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import act_fn, dense_init
+
+CAPACITY_FACTOR = 1.25  # default; per-config override via MoEConfig.capacity_factor
+GROUP_SIZE = 256
+
+
+def _ep_constraint(x, spec):
+    """Expert-parallel layout constraint (§Perf): force the dispatched
+    activations onto (groups->data, experts->model) so GSPMD emits
+    all-to-alls instead of replicating token activations across the model
+    axis.  Enabled via REPRO_MOE_CONSTRAINT=1 (requires a mesh context)."""
+    if os.environ.get("REPRO_MOE_CONSTRAINT") != "1":
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def init_moe(key, d_model: int, mo: MoEConfig, dtype):
+    ks = jax.random.split(key, 5)
+    E, dff = mo.num_experts, mo.d_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, E), dtype, scale=0.1),
+        "w_gate": dense_init(ks[1], (E, d_model, dff), dtype),
+        "w_up": dense_init(ks[2], (E, d_model, dff), dtype),
+        "w_down": dense_init(ks[3], (E, dff, d_model), dtype),
+    }
+    if mo.num_shared_experts:
+        d_sh = mo.d_shared * mo.num_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kk[0], (d_model, d_sh), dtype),
+            "w_up": dense_init(kk[1], (d_model, d_sh), dtype),
+            "w_down": dense_init(kk[2], (d_sh, d_model), dtype),
+        }
+    return p
+
+
+def _group_size(T: int) -> int:
+    gs = min(T, GROUP_SIZE)
+    while T % gs:
+        gs -= 1
+    return gs
+
+
+def capacity(tokens_per_group: int, mo: MoEConfig) -> int:
+    cf = mo.capacity_factor
+    c = int(tokens_per_group * mo.top_k * cf / mo.num_experts) + 1
+    return max(4, min(c, tokens_per_group))
+
+
+def apply_moe(p, x, mo: MoEConfig, act: str):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    gs = _group_size(T)
+    G = T // gs
+    E, K = mo.num_experts, mo.top_k
+    C = capacity(gs, mo)
+    fn = act_fn(act)
+
+    xg = x.reshape(G, gs, d)
+    logits = (xg @ p["router"]).astype(jnp.float32)          # (G, gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                 # (G, gs, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # per-(token,k) slot inside its expert's capacity buffer, within the group
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)         # (G, gs, K, E)
+    flat = onehot.reshape(G, gs * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat               # (G, gs*K, E)
+    pos = jnp.sum(flat * pos_in_e, axis=-1).reshape(G, gs, K)
+    keep = pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # build (G, gs, E, C) dispatch/combine without materialising the K axis
+    dispatch = jnp.zeros((G, gs, E, C), dtype=x.dtype)
+    combine = jnp.zeros((G, gs, E, C), dtype=x.dtype)
+    for k in range(K):
+        oe = jax.nn.one_hot(idx[..., k], E, dtype=x.dtype)   # (G, gs, E)
+        oc = jax.nn.one_hot(jnp.where(keep[..., k], pos[..., k], C),
+                            C + 1, dtype=x.dtype)[..., :-1]  # (G, gs, C)
+        d_k = oe[..., None] * oc[..., None, :]
+        dispatch = dispatch + d_k
+        combine = combine + d_k * gate_vals[..., k, None, None].astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)          # (G, E, C, d)
+    xe = _ep_constraint(xe, ("data", "model", None, None))
+    h = fn(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])        # (G, E, C, d)
+    ye = _ep_constraint(ye, ("data", "model", None, None))
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)            # (G, gs, d)
+    y = y.reshape(B, S, d)
+
+    if "shared" in p:
+        sh = p["shared"]
+        hs = fn(x @ sh["w_gate"]) * (x @ sh["w_up"])
+        y = y + hs @ sh["w_down"]
+
+    # load-balance aux loss (Switch style)
+    pm = probs.reshape(T, E)
+    me = jnp.mean(pm, axis=0)                                # (E,)
+    frac = jnp.mean(jax.nn.one_hot(idx[..., 0].reshape(T), E,
+                                   dtype=jnp.float32), axis=0)
+    aux = mo.router_aux_weight * E * jnp.sum(me * frac)
+    return y, aux

@@ -1,0 +1,204 @@
+"""Mamba-2 block (SSD — state-space duality), chunked prefill + one-step decode.
+
+Shapes (G = 1 state group):
+  projections : in_z/in_x (d, d_inner), in_bc (d, 2N), in_dt (d, nh)
+  x heads     : (B, S, nh, hd)      B/C: (B, S, N)
+  ssm state   : (B, nh, hd, N)
+  conv states : (B, d_inner, d_conv-1) and (B, 2N, d_conv-1)
+
+The input projection is intentionally SPLIT per segment (z, x, BC, dt)
+rather than fused: under tensor parallelism the z/x projections column-shard
+over the "model" axis (head-parallel SSD), while the small BC/dt projections
+stay replicated — a fused in_proj would put shard boundaries across segment
+edges and force GSPMD to reshard every slice.  The depthwise conv is split
+the same way (conv over x, conv over BC), which is mathematically identical
+to Mamba-2's conv over the concat.
+
+The chunked algorithm follows arXiv:2405.21060 §6: intra-chunk (quadratic
+within chunk, batched matmuls → MXU-friendly) + inter-chunk recurrence over
+chunk states (lax.scan).  kernels/ssd_scan provides the Pallas version of
+the same computation; this module is the jnp reference used for training
+and the architectures' default path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, gated_rmsnorm, init_norm
+
+
+def dims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.d_inner(cfg.d_model)
+    nh = ssm.n_heads(cfg.d_model)
+    return d_inner, nh, 2 * ssm.d_state
+
+
+def init_mamba_block(key, cfg: ArchConfig, dtype):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_inner, nh, d_bc = dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": dense_init(ks[0], (d, d_inner), dtype),
+        "in_x": dense_init(ks[1], (d, d_inner), dtype),
+        "in_bc": dense_init(ks[2], (d, d_bc), dtype),
+        "in_dt": dense_init(ks[3], (d, nh), dtype),
+        "conv_x": dense_init(ks[4], (d_inner, ssm.d_conv), dtype, scale=1.0),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc": dense_init(ks[5], (d_bc, ssm.d_conv), dtype, scale=1.0),
+        "conv_bc_b": jnp.zeros((d_bc,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_norm(ks[6], d_inner, "rmsnorm", dtype),
+        "out_proj": dense_init(ks[7], (d_inner, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b, d_conv: int):
+    """Depthwise causal conv over seq. x: (B, S, C), w: (C, d_conv)."""
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    acc = jnp.zeros_like(x) + b.astype(x.dtype)
+    S = x.shape[1]
+    for i in range(d_conv):
+        acc = acc + pad[:, i:i + S, :] * w[:, i]
+    return jax.nn.silu(acc)
+
+
+def ssd_chunked(xh, dt, A, Bmat, Cmat, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,nh,hd)  dt: (B,S,nh) fp32  A: (nh,) fp32 (negative)
+    Bmat/Cmat: (B,S,N).  Returns (y (B,S,nh,hd), final_state (B,nh,hd,N)).
+    """
+    B, S, nh, hd = xh.shape
+    N = Bmat.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    NC = S // Q
+    f32 = jnp.float32
+
+    xq = xh.reshape(B, NC, Q, nh, hd)
+    dtq = dt.reshape(B, NC, Q, nh)
+    Bq = Bmat.reshape(B, NC, Q, N).astype(f32)
+    Cq = Cmat.reshape(B, NC, Q, N).astype(f32)
+
+    a = dtq * A                                      # (B,NC,Q,nh)
+    a_cs = jnp.cumsum(a, axis=2)                     # inclusive cumsum
+    # intra-chunk: L[i,j] = exp(a_cs[i] - a_cs[j]) for i >= j
+    li = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]   # (B,NC,Q,Q,nh)
+    iq = jnp.arange(Q)
+    tri = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    L = jnp.where(tri, jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cq, Bq)       # (B,NC,Q,Q)
+    M = cb[..., None] * L * dtq[:, :, None, :, :]    # weight on x_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M.astype(xh.dtype), xq)
+
+    # chunk states: sum_j B_j ⊗ x_j * dt_j * exp(a_cs[-1] - a_cs[j])
+    decay_end = jnp.exp(a_cs[:, :, -1:, :] - a_cs)   # (B,NC,Q,nh)
+    w = (dtq * decay_end).astype(f32)                # (B,NC,Q,nh)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bq, w,
+                        xq.astype(f32))              # (B,NC,nh,hd,N)
+
+    # inter-chunk recurrence
+    a_sum = a_cs[:, :, -1, :]                        # (B,NC,nh)
+    if initial_state is None:
+        initial_state = jnp.zeros((B, nh, hd, N), f32)
+
+    def step(carry, inp):
+        st_c, decay_c = inp                          # (B,nh,hd,N), (B,nh)
+        prev = carry
+        new = jnp.exp(decay_c)[:, :, None, None] * prev + st_c
+        return new, prev
+
+    final, prevs = jax.lax.scan(
+        step, initial_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(a_sum, 1, 0)))
+    prev_states = jnp.moveaxis(prevs, 0, 1)          # (B,NC,nh,hd,N)
+
+    # inter-chunk contribution: C_i · (exp(a_cs[i]) * prev_state)
+    c_decay = jnp.exp(a_cs)                          # (B,NC,Q,nh)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", Cq,
+                         c_decay.astype(f32), prev_states)
+    y = y_intra.astype(f32) + y_inter
+    return y.reshape(B, S, nh, hd), final
+
+
+def mamba_forward(p, x, cfg: ArchConfig, *, return_state=False,
+                  initial_state=None):
+    """Full-sequence Mamba-2 block. x: (B,S,d) -> (B,S,d)."""
+    ssm = cfg.ssm
+    d_inner, nh, d_bc = dims(cfg)
+    hd = ssm.head_dim
+    B, S, _ = x.shape
+    N = ssm.d_state
+
+    z = x @ p["in_z"]
+    xr = x @ p["in_x"]
+    bc = x @ p["in_bc"]
+    dt = x @ p["in_dt"]
+
+    def tail(v):
+        if S >= ssm.d_conv - 1:
+            return v[:, -(ssm.d_conv - 1):, :]
+        return jnp.pad(v, ((0, 0), (ssm.d_conv - 1 - S, 0), (0, 0)))
+    conv_x_tail, conv_bc_tail = tail(xr), tail(bc)
+
+    xr = _causal_conv(xr, p["conv_x"], p["conv_x_b"], ssm.d_conv)
+    bc = _causal_conv(bc, p["conv_bc"], p["conv_bc_b"], ssm.d_conv)
+    xs = xr.reshape(B, S, nh, hd)
+    Bmat, Cmat = bc[..., :N], bc[..., N:]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final = ssd_chunked(xs, dtf, A, Bmat, Cmat, ssm.chunk,
+                           initial_state=initial_state)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = gated_rmsnorm(p["norm"], y, z)
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_state = (jnp.moveaxis(conv_x_tail, 1, 2),
+                      jnp.moveaxis(conv_bc_tail, 1, 2))
+        return out, (final, conv_state)
+    return out
+
+
+def mamba_decode(p, x, state: Tuple, cfg: ArchConfig):
+    """One-token decode. x: (B,1,d); state = (ssm_state, (conv_x, conv_bc))."""
+    ssm = cfg.ssm
+    d_inner, nh, d_bc = dims(cfg)
+    hd = ssm.head_dim
+    N = ssm.d_state
+    B = x.shape[0]
+    ssm_state, (cx, cbc) = state            # (B,nh,hd,N), (B,d_inner,3), ...
+    xt = x[:, 0, :]
+    z = xt @ p["in_z"]
+    xr = xt @ p["in_x"]
+    bc = xt @ p["in_bc"]
+    dt = xt @ p["in_dt"]
+
+    def conv_step(prev, new, w, b):
+        win = jnp.concatenate([prev, new[:, :, None]], axis=-1)
+        out = jax.nn.silu(jnp.sum(win * w[None], axis=-1) + b)
+        return out, win[:, :, 1:]
+    xr, cx = conv_step(cx, xr, p["conv_x"], p["conv_x_b"])
+    bc, cbc = conv_step(cbc, bc, p["conv_bc"], p["conv_bc_b"])
+
+    xs = xr.reshape(B, nh, hd)
+    Bv = bc[:, :N].astype(jnp.float32)
+    Cv = bc[:, N:].astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtf * A)                          # (B,nh)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dtf, Bv, xs.astype(jnp.float32))
+    ssm_state = decay[:, :, None, None] * ssm_state + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cv, ssm_state)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = gated_rmsnorm(p["norm"], y, z[:, None, :])
+    return y @ p["out_proj"], (ssm_state, (cx, cbc))

@@ -1,0 +1,19 @@
+"""Learning-rate schedules as jnp-traceable functions of the step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, *, peak_lr: float, warmup_steps: int):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    return peak_lr * jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup_steps: int,
+                    total_steps: int, min_ratio: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+    frac = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                    0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return peak_lr * warm * cos

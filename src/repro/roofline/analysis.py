@@ -1,0 +1,97 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs  / (chips * peak_FLOPs)
+  memory term     = HLO_bytes  / (chips * HBM_bw)
+  collective term = coll_bytes / (chips * link_bw)
+
+``cost_analysis()`` on an SPMD-partitioned executable reports *per-device*
+flops/bytes, so the terms below divide by chips only when given whole-system
+numbers (we pass per-device numbers straight through with chips=1).
+
+collective_bytes is parsed from the post-SPMD HLO text: we sum the result
+shapes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops with an op-specific traffic multiplier (ring
+all-reduce moves ~2x its buffer; the others ~1x).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class HW:
+    """TPU v5e-class chip."""
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # B/s
+    link_bw: float = 50e9             # B/s per ICI link (assumption: one
+    #                                   link's worth of bisection per chip)
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_TRAFFIC_MULT = {
+    "all-reduce": 2.0,        # ring: reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def parse_collectives(hlo_text: str) -> List[Tuple[str, int]]:
+    """Returns [(op_kind, traffic_bytes_per_device), ...]."""
+    out = []
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        name, dtype, dims, kind = m.group(1), m.group(2), m.group(3), m.group(4)
+        # avoid double counting async start/done pairs
+        if ".done" in name or name in seen_done:
+            continue
+        seen_done.add(name)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((kind, int(n * _DTYPE_BYTES[dtype]
+                               * _TRAFFIC_MULT[kind])))
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    per_kind: Dict[str, float] = {}
+    for kind, b in parse_collectives(hlo_text):
+        per_kind[kind] = per_kind.get(kind, 0) + b
+    per_kind["total"] = sum(per_kind.values())
+    return per_kind
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, hw: HW = HW()) -> Dict[str, float]:
+    t_c = flops_per_dev / hw.peak_flops
+    t_m = bytes_per_dev / hw.hbm_bw
+    t_x = coll_bytes_per_dev / hw.link_bw
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom}
+
+
+def model_flops(cfg: ArchConfig, tokens: int, *, train: bool) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); 2*N*D for inference."""
+    n = cfg.active_param_count()
+    mult = 6.0 if train else 2.0
+    return mult * n * tokens

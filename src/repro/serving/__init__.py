@@ -1,0 +1,2 @@
+from repro.serving.engine import ServeEngine, Request  # noqa: F401
+from repro.serving.federation_service import FederationService  # noqa: F401

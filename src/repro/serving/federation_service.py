@@ -1,0 +1,56 @@
+"""Federation service: the deployable form of Armol.
+
+Wires the trained RL selector onto a pool of provider endpoints.  In
+production each endpoint is a ServeEngine (or a remote MLaaS); here the
+providers come from the trace substrate, so the service demonstrates the
+full path: image -> features -> SAC proto action -> tau -> fan-out to the
+selected providers -> word grouping -> ensemble -> final detections,
+with per-request cost/latency accounting (inference latency is the max
+over selected providers + per-provider transmission, Sec. II-B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.ensemble.boxes import Detections
+from repro.ensemble.pipeline import ensemble_detections
+from repro.federation.env import ArmolEnv
+
+
+@dataclass
+class FederationResult:
+    detections: Detections
+    action: np.ndarray
+    cost_milli_usd: float
+    latency_ms: float
+
+
+class FederationService:
+    def __init__(self, env: ArmolEnv, agent, *, deterministic: bool = True,
+                 transmission_ms: float = 20.0):
+        self.env = env
+        self.agent = agent
+        self.deterministic = deterministic
+        self.transmission_ms = transmission_ms
+
+    def handle(self, img_idx: int) -> FederationResult:
+        s = self.env.features[img_idx]
+        a, _ = self.agent.select_action(s, deterministic=self.deterministic)
+        sel = np.where(a > 0.5)[0]
+        dets = [self.env.traces.dets[img_idx][i] for i in sel]
+        ens = ensemble_detections(dets, voting=self.env.voting,
+                                  ablation=self.env.ablation) if dets else \
+            Detections.empty()
+        cost = float(np.sum(self.env.costs[sel]))
+        # transmission is sequential over selected providers; inference is
+        # parallel -> max latency (paper Sec. II-B)
+        lats = [self.env.traces.providers[i].latency_ms for i in sel]
+        latency = self.transmission_ms * len(sel) + (max(lats) if lats
+                                                     else 0.0)
+        return FederationResult(ens, a, cost, latency)
+
+    def handle_many(self, img_indices) -> List[FederationResult]:
+        return [self.handle(int(i)) for i in img_indices]

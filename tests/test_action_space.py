@@ -1,0 +1,73 @@
+"""Property tests for the combinatorial action mapping tau (paper Eq. 3-4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.action_space import (codebook, k_nearest, nearest_in_codebook,
+                                     threshold_map, wolpertinger_select)
+
+
+@given(st.integers(2, 10),
+       st.lists(st.floats(0.0, 1.0, allow_nan=False), min_size=2,
+                max_size=10))
+@settings(max_examples=200, deadline=None)
+def test_threshold_map_is_exact_nearest_neighbour(n, vals):
+    """threshold_map == brute-force argmin over the enumerated codebook."""
+    vals = (vals + [0.5] * n)[:n]
+    proto = jnp.asarray(vals, jnp.float32)
+    fast = np.asarray(threshold_map(proto))
+    cb = codebook(n)
+    d = np.sum((cb - np.asarray(proto)[None]) ** 2, axis=1)
+    best = d.min()
+    # the fast answer must be valid, binary, nonzero, and distance-optimal
+    assert fast.shape == (n,)
+    assert set(np.unique(fast)).issubset({0.0, 1.0})
+    assert fast.sum() >= 1
+    fast_d = np.sum((fast - np.asarray(proto)) ** 2)
+    assert fast_d <= best + 1e-6
+
+
+@given(st.integers(2, 8))
+@settings(max_examples=30, deadline=None)
+def test_codebook_enumerates_all_nonzero_vectors(n):
+    cb = codebook(n)
+    assert cb.shape == (2 ** n - 1, n)
+    assert not np.any(np.all(cb == 0, axis=1))
+    assert len(np.unique(cb, axis=0)) == 2 ** n - 1
+
+
+def test_threshold_map_batched():
+    protos = jnp.asarray([[0.9, 0.1, 0.6], [0.1, 0.2, 0.3]])
+    out = np.asarray(threshold_map(protos))
+    assert out.tolist() == [[1.0, 0.0, 1.0], [0.0, 0.0, 1.0]]
+
+
+def test_nearest_in_codebook_matches_threshold():
+    rng = np.random.default_rng(0)
+    protos = rng.random((50, 6)).astype(np.float32)
+    for p in protos:
+        a = np.asarray(threshold_map(jnp.asarray(p)))
+        b = np.asarray(nearest_in_codebook(jnp.asarray(p), 6))
+        da = np.sum((a - p) ** 2)
+        db = np.sum((b - p) ** 2)
+        assert abs(da - db) < 1e-6
+
+
+def test_wolpertinger_prefers_higher_q():
+    # Q prefers exactly the vector [0,1,0]; with k covering the space the
+    # re-ranked pick must be it even though the proto is near [1,0,0]
+    target = jnp.asarray([0.0, 1.0, 0.0])
+
+    def q_fn(_s, actions):
+        return -jnp.sum((actions - target) ** 2, axis=-1)
+    proto = jnp.asarray([0.9, 0.2, 0.1])
+    a = wolpertinger_select(proto, jnp.zeros(4), q_fn, k=7)
+    assert np.asarray(a).tolist() == [0.0, 1.0, 0.0]
+
+
+def test_k_nearest_sorted_by_distance():
+    proto = jnp.asarray([0.8, 0.2, 0.55])
+    cand = np.asarray(k_nearest(proto, 3, 4))
+    d = np.sum((cand - np.asarray(proto)[None]) ** 2, axis=1)
+    assert np.all(np.diff(d) >= -1e-6)

@@ -1,0 +1,143 @@
+"""Ensemble stage: voting, NMS/Soft-NMS/WBF, pipeline invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ensemble.ablation import nms, soft_nms, wbf
+from repro.ensemble.boxes import Detections, iou_matrix
+from repro.ensemble.pipeline import PATHWAYS, ensemble_detections
+from repro.ensemble.voting import group_detections, vote_filter
+
+
+def _dets(boxes, scores=None, labels=None, providers=None):
+    n = len(boxes)
+    return Detections(np.asarray(boxes, np.float32),
+                      np.ones(n, np.float32) if scores is None else scores,
+                      np.zeros(n, np.int32) if labels is None else labels,
+                      providers)
+
+
+BOX = [0.2, 0.2, 0.6, 0.6]
+NEAR = [0.22, 0.21, 0.61, 0.59]          # IoU with BOX > 0.5
+FAR = [0.7, 0.7, 0.95, 0.95]
+
+
+def test_iou_matrix_basics():
+    m = iou_matrix(np.asarray([BOX]), np.asarray([BOX, FAR]))
+    assert m[0, 0] == pytest.approx(1.0)
+    assert m[0, 1] == pytest.approx(0.0)
+
+
+def test_grouping_same_label_high_iou():
+    d = _dets([BOX, NEAR, FAR], labels=np.asarray([1, 1, 1], np.int32))
+    groups = group_detections(d)
+    sizes = sorted(len(g) for g in groups)
+    assert sizes == [1, 2]
+
+
+def test_grouping_label_mismatch_blocks_merge():
+    d = _dets([BOX, NEAR], labels=np.asarray([1, 2], np.int32))
+    groups = group_detections(d)
+    assert len(groups) == 2
+
+
+def test_vote_filters():
+    d = _dets([BOX, NEAR, FAR],
+              labels=np.asarray([1, 1, 1], np.int32),
+              providers=np.asarray([0, 1, 0], np.int32))
+    groups = group_detections(d)
+    aff = vote_filter(d, groups, method="affirmative", n_selected=2)
+    con = vote_filter(d, groups, method="consensus", n_selected=2)
+    una = vote_filter(d, groups, method="unanimous", n_selected=2)
+    assert len(aff) == 2
+    # the 2-member group has 2 distinct providers -> consensus+unanimous keep
+    assert len(con) == 1 and len(una) == 1
+    assert len(con[0]) == 2
+
+
+def test_nms_keeps_top_score():
+    sc = np.asarray([0.9, 0.8, 0.7], np.float32)
+    d = _dets([BOX, NEAR, FAR], scores=sc, labels=np.zeros(3, np.int32))
+    out = nms(d, iou_thr=0.5)
+    assert len(out) == 2
+    assert 0.9 in out.scores and 0.7 in out.scores and 0.8 not in out.scores
+
+
+def test_soft_nms_decays_not_deletes():
+    sc = np.asarray([0.9, 0.8], np.float32)
+    d = _dets([BOX, NEAR], scores=sc, labels=np.zeros(2, np.int32))
+    out = soft_nms(d)
+    assert len(out) == 2
+    assert out.scores.min() < 0.8          # decayed
+
+
+def test_wbf_fuses_group_weighted():
+    sc = np.asarray([0.9, 0.1], np.float32)
+    d = _dets([BOX, NEAR], scores=sc, labels=np.zeros(2, np.int32),
+              providers=np.asarray([0, 1], np.int32))
+    groups = group_detections(d)
+    assert len(groups) == 1
+    out = wbf(d, groups)
+    assert len(out) == 1
+    # fused box closer to the high-confidence member
+    assert np.sum(np.abs(out.boxes[0] - np.asarray(BOX))) < \
+        np.sum(np.abs(out.boxes[0] - np.asarray(NEAR)))
+    assert out.scores[0] == pytest.approx(0.5, abs=1e-6)
+
+
+def test_wbf_rescale_downweights_single_provider():
+    sc = np.asarray([0.9, 0.9, 0.9], np.float32)
+    d = _dets([BOX, NEAR, FAR], scores=sc, labels=np.zeros(3, np.int32),
+              providers=np.asarray([0, 1, 0], np.int32))
+    groups = group_detections(d)
+    out = wbf(d, groups, n_models=2)
+    by_score = sorted(out.scores)
+    assert by_score[0] == pytest.approx(0.45)    # lone FAR box: 0.9 * 1/2
+    assert by_score[1] == pytest.approx(0.9)     # 2-provider consensus
+
+
+def test_all_12_pathways_run():
+    per_provider = [
+        _dets([BOX, FAR], scores=np.asarray([0.8, 0.6], np.float32),
+              labels=np.asarray([1, 2], np.int32)),
+        _dets([NEAR], scores=np.asarray([0.7], np.float32),
+              labels=np.asarray([1], np.int32)),
+    ]
+    assert len(PATHWAYS) == 12
+    for voting, ablation in PATHWAYS:
+        out = ensemble_detections(per_provider, voting=voting,
+                                  ablation=ablation)
+        assert len(out) <= 3
+
+
+def test_pipeline_kernel_path_matches_numpy_path():
+    rng = np.random.default_rng(3)
+    boxes = rng.random((12, 4)).astype(np.float32)
+    boxes[:, 2:] = boxes[:, :2] + 0.2
+    per_provider = [
+        _dets(boxes[:6], scores=rng.random(6).astype(np.float32),
+              labels=(rng.integers(0, 3, 6)).astype(np.int32)),
+        _dets(boxes[6:], scores=rng.random(6).astype(np.float32),
+              labels=(rng.integers(0, 3, 6)).astype(np.int32)),
+    ]
+    a = ensemble_detections(per_provider, use_kernel=False)
+    b = ensemble_detections(per_provider, use_kernel=True)
+    assert len(a) == len(b)
+    np.testing.assert_allclose(a.boxes, b.boxes, atol=1e-6)
+    np.testing.assert_allclose(a.scores, b.scores, atol=1e-6)
+
+
+@given(st.integers(1, 5), st.integers(0, 6))
+@settings(max_examples=25, deadline=None)
+def test_ensemble_count_invariant(n_prov, n_det):
+    """Output detections never exceed total input detections."""
+    rng = np.random.default_rng(n_prov * 100 + n_det)
+    per_provider = []
+    for _ in range(n_prov):
+        b = rng.random((n_det, 4)).astype(np.float32)
+        b[:, 2:] = b[:, :2] + rng.random((n_det, 2)).astype(np.float32) * 0.3
+        per_provider.append(_dets(
+            b, scores=rng.random(n_det).astype(np.float32),
+            labels=rng.integers(0, 4, n_det).astype(np.int32)))
+    out = ensemble_detections(per_provider)
+    assert len(out) <= n_prov * n_det

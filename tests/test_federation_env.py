@@ -1,0 +1,125 @@
+"""Trace substrate + environment tests (reward semantics per Eq. 5)."""
+import numpy as np
+import pytest
+
+from repro.core.loops import (ensembleN_policy, evaluate_policy,
+                              random1_policy, upper_bound)
+from repro.ensemble.metrics import ap50
+from repro.federation.env import ArmolEnv
+from repro.federation.providers import default_providers, \
+    scalability_providers
+from repro.federation.traces import generate_traces
+
+TR = generate_traces(default_providers(), 120, seed=0)
+
+
+def test_traces_deterministic():
+    t2 = generate_traces(default_providers(), 120, seed=0)
+    np.testing.assert_array_equal(TR.images, t2.images)
+    for a, b in zip(TR.dets[5], t2.dets[5]):
+        np.testing.assert_array_equal(a.boxes, b.boxes)
+
+
+def test_trace_shapes():
+    assert TR.images.shape == (120, 48, 48, 3)
+    assert TR.n_providers == 3
+    assert len(TR.dets[0]) == 3
+
+
+def test_word_grouping_applied():
+    """Raw words include dialect synonyms; canonical dets only template ids."""
+    saw_synonym = False
+    for img in range(30):
+        for p, raw in enumerate(TR.raw[img]):
+            for w in raw.words:
+                if w in ("automobile", "mug", "sofa", "human", "table"):
+                    saw_synonym = True
+        for d in TR.dets[img]:
+            assert np.all(d.labels >= 0) and np.all(d.labels < 80)
+    assert saw_synonym
+
+
+def test_aws_blind_spots():
+    """AWS never reports bottle/cup/dining-table (paper Fig. 1)."""
+    blind_ids = {39, 41, 60}   # bottle, cup, dining table template indices
+    from repro.federation.vocab import COCO_TEMPLATE
+    blind_ids = {COCO_TEMPLATE.index(c)
+                 for c in ("bottle", "cup", "dining table")}
+    for img in range(len(TR)):
+        aws = TR.dets[img][0]
+        gt_present = set(TR.gts[img].labels.tolist())
+        # AWS may emit a blind category only as a mislabelled FP; TPs are
+        # impossible. Check: no high-IoU match between an AWS blind-label box
+        # and a GT box of that category.
+        for bid in blind_ids & gt_present:
+            from repro.ensemble.boxes import iou_matrix
+            gt_boxes = TR.gts[img].boxes[TR.gts[img].labels == bid]
+            aws_boxes = aws.boxes[aws.labels == bid]
+            if len(aws_boxes) and len(gt_boxes):
+                assert iou_matrix(aws_boxes, gt_boxes).max() < 0.5
+
+
+ENV = ArmolEnv(TR, mode="gt", beta=0.0, seed=3)
+
+
+def test_reward_empty_selection_is_minus_one():
+    # provider with no detections on some image: force via azure-only on an
+    # image where azure returned nothing
+    for img in range(len(TR)):
+        if len(TR.dets[img][1]) == 0:
+            r, v, c = ENV.evaluate_action(img, np.asarray([0, 1, 0.],
+                                                          np.float32))
+            assert r == -1.0 and v == 0.0
+            return
+    pytest.skip("azure returned detections on every trace image")
+
+
+def test_reward_beta_cost_tradeoff():
+    env_b = ArmolEnv(TR, mode="gt", beta=-0.1, seed=3)
+    img = int(env_b.train_idx[0])
+    r0, v0, c0 = ENV.evaluate_action(img, np.ones(3, np.float32))
+    r1, v1, c1 = env_b.evaluate_action(img, np.ones(3, np.float32))
+    assert c0 == c1 == 3.0
+    if r0 != -1.0:
+        assert r1 == pytest.approx(r0 - 0.3)
+
+
+def test_env_episode_mechanics():
+    s = ENV.reset(split="train")
+    assert s.shape == (ENV.state_dim,)
+    n = len(ENV.train_idx)
+    done = False
+    steps = 0
+    while not done and steps < n + 1:
+        _, _, done, info = ENV.step(np.ones(3, np.float32))
+        steps += 1
+    assert steps == n and done
+
+
+def test_nogt_uses_pseudo_ground_truth():
+    env = ArmolEnv(TR, mode="nogt", beta=0.0, seed=3)
+    img = int(env.train_idx[0])
+    pseudo = env.pseudo_gt(img)
+    r, v, c = env.evaluate_action(img, np.ones(3, np.float32))
+    # evaluating the all-provider ensemble against itself -> near-perfect AP
+    if len(pseudo) > 0:
+        assert v > 0.9
+
+
+def test_evaluate_policy_and_upper_bound_ordering():
+    res_r1 = evaluate_policy(random1_policy(ENV, seed=0), ENV)
+    res_all = evaluate_policy(ensembleN_policy(ENV), ENV)
+    ub = upper_bound(ENV)
+    assert res_all["cost"] == pytest.approx(3.0)
+    assert res_r1["cost"] == pytest.approx(1.0)
+    # paper ordering: UB >= EnsembleN > Random-1 (corpus AP50)
+    assert ub["ap50"] >= res_all["ap50"] - 3.0
+    assert res_all["ap50"] > res_r1["ap50"]
+    assert ub["cost"] < 2.0
+
+
+def test_scalability_providers_profile():
+    provs = scalability_providers()
+    assert len(provs) == 10
+    recs = [p.base_recall for p in provs]
+    assert max(recs) == recs[5]              # MLaaS 5 dominates (Tab. III)

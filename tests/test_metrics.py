@@ -1,0 +1,81 @@
+"""COCO-style AP metric tests."""
+import numpy as np
+import pytest
+
+from repro.ensemble.boxes import Detections
+from repro.ensemble.metrics import average_precision, coco_map, image_ap50
+
+
+def _d(boxes, scores, labels):
+    return Detections(np.asarray(boxes, np.float32),
+                      np.asarray(scores, np.float32),
+                      np.asarray(labels, np.int32))
+
+
+GT = _d([[0.1, 0.1, 0.4, 0.4], [0.6, 0.6, 0.9, 0.9]], [1, 1], [0, 0])
+
+
+def test_perfect_predictions_ap_1():
+    dt = _d(GT.boxes, [0.9, 0.8], [0, 0])
+    assert average_precision({0: dt}, {0: GT}) == pytest.approx(1.0)
+
+
+def test_no_predictions_ap_0():
+    assert average_precision({0: Detections.empty()}, {0: GT}) == 0.0
+
+
+def test_half_recall():
+    dt = _d([[0.1, 0.1, 0.4, 0.4]], [0.9], [0])
+    ap = average_precision({0: dt}, {0: GT})
+    # one of two GTs found at precision 1 -> AP slightly above 0.5 due to
+    # 101-pt interpolation boundary
+    assert 0.45 < ap < 0.55
+
+
+def test_fp_above_tp_hurts():
+    clean = _d(GT.boxes, [0.9, 0.8], [0, 0])
+    noisy = _d(np.vstack([GT.boxes, [[0.3, 0.5, 0.5, 0.7]]]),
+               [0.9, 0.8, 0.95], [0, 0, 0])
+    assert average_precision({0: noisy}, {0: GT}) < \
+        average_precision({0: clean}, {0: GT})
+
+
+def test_fp_below_all_tps_harmless_at_ap50():
+    clean = _d(GT.boxes, [0.9, 0.8], [0, 0])
+    noisy = _d(np.vstack([GT.boxes, [[0.3, 0.5, 0.5, 0.7]]]),
+               [0.9, 0.8, 0.1], [0, 0, 0])
+    assert average_precision({0: noisy}, {0: GT}) == pytest.approx(
+        average_precision({0: clean}, {0: GT}))
+
+
+def test_wrong_label_is_fp():
+    dt = _d(GT.boxes, [0.9, 0.8], [1, 1])
+    assert average_precision({0: dt}, {0: GT}) == 0.0
+
+
+def test_iou_threshold_matters():
+    shifted = GT.boxes + 0.04        # IoU ~0.6: inside [0.5, 0.75)
+    dt = _d(shifted, [0.9, 0.8], [0, 0])
+    ap50 = average_precision({0: dt}, {0: GT}, iou_thr=0.5)
+    ap75 = average_precision({0: dt}, {0: GT}, iou_thr=0.75)
+    assert ap50 > ap75
+
+
+def test_coco_map_leq_ap50():
+    dt = _d(GT.boxes + 0.02, [0.9, 0.8], [0, 0])
+    assert coco_map({0: dt}, {0: GT}) <= \
+        average_precision({0: dt}, {0: GT}, iou_thr=0.5) + 1e-9
+
+
+def test_image_ap50_is_reward_signal():
+    dt = _d(GT.boxes, [0.9, 0.8], [0, 0])
+    assert image_ap50(dt, GT) == pytest.approx(1.0)
+    assert image_ap50(Detections.empty(), GT) == 0.0
+
+
+def test_corpus_pools_across_images():
+    # image 0 perfect, image 1 empty -> corpus AP ~ 0.5 (same class)
+    dt0 = _d(GT.boxes, [0.9, 0.8], [0, 0])
+    ap = average_precision({0: dt0, 1: Detections.empty()},
+                           {0: GT, 1: GT})
+    assert 0.4 < ap < 0.6

@@ -1,0 +1,121 @@
+"""Sharding-rule unit tests (pure PartitionSpec logic — no devices) and a
+small real-mesh pjit integration test on the host device."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_arch
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+
+
+def _specs_for(aid, mode="2d", model_size=16, data_size=16):
+    cfg = get_arch(aid)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    out = {}
+
+    def walk(path, leaf):
+        out[jax.tree_util.keystr(path)] = shd.param_pspec(
+            path, leaf, cfg, model_size=model_size, data_size=data_size,
+            mode=mode)
+        return leaf
+    jax.tree_util.tree_map_with_path(walk, shapes)
+    return out, shapes
+
+
+def test_dense_tp_rules():
+    specs, shapes = _specs_for("qwen1.5-110b", mode="tp")
+    assert specs["['embed']"] == P("model", None)
+    assert specs["['blocks']['attn']['wq']"] == P(None, None, "model")
+    # kv heads = 8 < 16 -> replicated kv projections
+    assert specs["['blocks']['attn']['wk']"] == P(None, None, None)
+    assert specs["['blocks']['attn']['wo']"] == P(None, "model", None)
+    assert specs["['blocks']['mlp']['w_gate']"] == P(None, None, "model")
+    assert specs["['blocks']['mlp']['w_down']"] == P(None, "model", None)
+
+
+def test_dense_2d_adds_fsdp_axis():
+    specs, _ = _specs_for("qwen1.5-110b", mode="2d")
+    assert specs["['blocks']['attn']['wq']"] == P(None, "data", "model")
+    assert specs["['blocks']['mlp']['w_down']"] == P(None, "model", "data")
+
+
+def test_moe_expert_parallel():
+    specs, _ = _specs_for("olmoe-1b-7b", mode="2d")
+    # (L, E, d, dff): experts (64) over model axis
+    assert specs["['blocks']['moe']['w_gate']"] == \
+        P(None, "model", "data", None)
+    assert specs["['blocks']['moe']['router']"] == P(None, "data", None)
+
+
+def test_deepseek_mla_rules():
+    specs, _ = _specs_for("deepseek-v2-236b", mode="2d")
+    # wq_a deliberately replicated (EXPERIMENTS.md §Perf iteration 2)
+    assert specs["['blocks']['attn']['wq_a']"][-1] is None
+    assert specs["['blocks']['attn']['wk_b']"][-1] == "model"   # 128 heads
+    assert specs["['blocks']['moe']['w_gate']"] == \
+        P(None, "model", "data", None)   # 160 experts / 16
+
+
+def test_mamba_head_parallel():
+    specs, _ = _specs_for("mamba2-370m", mode="tp")
+    assert specs["['blocks']['mamba']['in_x']"] == P(None, None, "model")
+    assert specs["['blocks']['mamba']['in_z']"] == P(None, None, "model")
+    assert specs["['blocks']['mamba']['in_bc']"] == P(None, None, None)
+    assert specs["['blocks']['mamba']['out_proj']"] == P(None, "model", None)
+    assert specs["['blocks']['mamba']['conv_x']"] == P(None, "model", None)
+
+
+def test_vlm_nested_stack_rules():
+    specs, _ = _specs_for("llama-3.2-vision-11b", mode="tp")
+    # selfs carry TWO leading stack dims (super, per-1)
+    assert specs["['blocks']['selfs']['attn']['wq']"] == \
+        P(None, None, None, "model")
+    assert specs["['blocks']['cross']['attn']['wq']"] == \
+        P(None, None, "model")
+
+
+def test_cache_specs_decode():
+    cfg = get_arch("command-r-plus-104b")
+    model = build_model(cfg)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(None, 128, 32768, None))
+    spec_k = shd.cache_pspec(
+        (jax.tree_util.DictKey("k"),), cache_shapes["k"], cfg,
+        model_size=16, data_size=16, global_batch=128)
+    # kv=8 not divisible by 16 -> sequence-sharded cache
+    assert spec_k == P(None, "data", "model", None, None)
+    cfg2 = get_arch("qwen1.5-0.5b")                  # kv=16 -> head-sharded
+    model2 = build_model(cfg2)
+    cs2 = jax.eval_shape(lambda: model2.init_cache(None, 128, 32768, None))
+    spec_k2 = shd.cache_pspec(
+        (jax.tree_util.DictKey("k"),), cs2["k"], cfg2,
+        model_size=16, data_size=16, global_batch=128)
+    assert spec_k2 == P(None, "data", None, "model", None)
+
+
+def test_batch_pspec_fallbacks():
+    mesh = make_host_mesh()
+    assert shd.batch_pspec(mesh, 16) == P(("data",))
+    # batch=1 not divisible -> replicated
+    if mesh.shape["data"] > 1:
+        assert shd.batch_pspec(mesh, 1) == P(None)
+
+
+def test_pjit_forward_on_host_mesh():
+    """End-to-end pjit with the rule-derived shardings on the real device."""
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    model = build_model(cfg, dtype=jnp.float32)
+    mesh = make_host_mesh(model=1, data=1)
+    params = model.init(jax.random.PRNGKey(0))
+    shardings = shd.params_shardings(
+        mesh, jax.eval_shape(model.init, jax.random.PRNGKey(0)), cfg, "tp")
+    params = jax.device_put(params, shardings)
+    tokens = jnp.zeros((2, 16), jnp.int32)
+    fn = jax.jit(lambda p, t: model.forward(p, {"tokens": t})[0])
+    logits = fn(params, tokens)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())

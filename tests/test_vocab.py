@@ -1,0 +1,49 @@
+"""Word-grouping (paper Sec. IV-C) tests."""
+from repro.federation.vocab import COCO_TEMPLATE, WordGrouper
+
+
+def test_template_has_80_categories():
+    assert len(COCO_TEMPLATE) == 80
+    assert len(set(COCO_TEMPLATE)) == 80
+
+
+def test_identity_mapping():
+    g = WordGrouper()
+    for i, cat in enumerate(COCO_TEMPLATE):
+        assert g.to_group(cat) == i
+
+
+def test_paper_example_motorbike_motorcycle():
+    g = WordGrouper()
+    assert g.to_group("motorbike") == g.to_group("motorcycle")
+
+
+def test_synonyms_resolve():
+    g = WordGrouper()
+    assert g.to_group("sofa") == COCO_TEMPLATE.index("couch")
+    assert g.to_group("television") == COCO_TEMPLATE.index("tv")
+    assert g.to_group("mobile phone") == COCO_TEMPLATE.index("cell phone")
+    assert g.to_group("aeroplane") == COCO_TEMPLATE.index("airplane")
+
+
+def test_normalisation():
+    g = WordGrouper()
+    assert g.to_group("  Motor-Bike ") == COCO_TEMPLATE.index("motorcycle")
+    assert g.to_group("TV_Monitor") == COCO_TEMPLATE.index("tv")
+
+
+def test_irrelevant_words_discarded():
+    g = WordGrouper()
+    for w in ("shadow", "texture", "quantum", "blur"):
+        assert g.to_group(w) == -1
+
+
+def test_manual_additions():
+    g = WordGrouper(manual_additions={"hydroplane": "airplane"})
+    assert g.to_group("hydroplane") == COCO_TEMPLATE.index("airplane")
+
+
+def test_group_all():
+    g = WordGrouper()
+    out = g.group_all(["person", "human", "blur"])
+    assert out[0] == out[1] == 0 and out[2] == -1
