@@ -210,6 +210,80 @@ def bench_scalability():
 
 
 # ---------------------------------------------------------------------------
+# Subset-evaluation core: cached/batched vs the seed per-pair path
+# ---------------------------------------------------------------------------
+
+def bench_subset_cache():
+    """Upper-bound-style enumeration of all 2^N - 1 subsets per test image
+    (paper Algo. 2 / Tab. III regime) through the memoized
+    ``SubsetEvaluationCore`` vs the frozen seed implementation
+    (``benchmarks/seed_reference.py``).  Also reports the warm-cache pass
+    (every (image, subset) pair already memoized — the steady state of a
+    multi-epoch training run).  Per-image interleaving keeps the
+    comparison fair on noisy shared machines.
+    """
+    sys.path.insert(0, os.path.dirname(__file__))
+    from seed_reference import seed_ensemble_detections, seed_image_ap50
+    from repro.core.loops import enumeration_actions
+    from repro.federation.evaluation import SubsetEvaluationCore
+    from repro.federation.providers import scalability_providers
+    from repro.federation.traces import generate_traces
+
+    n_prov = 7
+    n_images = min(IMAGES, 60)
+    traces = generate_traces(scalability_providers()[:n_prov], n_images,
+                             seed=0)
+    actions = enumeration_actions(n_prov)
+    core = SubsetEvaluationCore(traces)
+    masks = [core.mask_of(a) for a in actions]
+    n_pairs = n_images * len(actions)
+
+    seed_s = cached_s = 0.0
+    mismatches = 0
+    max_ap_diff = 0.0
+    for img in range(n_images):
+        gt = traces.gts[img]
+        t0 = time.time()
+        best_v, best_a = -1.0, None
+        for a in actions:
+            sel = [traces.dets[img][i] for i in range(n_prov) if a[i] > 0.5]
+            v = seed_image_ap50(seed_ensemble_detections(sel), gt)
+            if v > best_v:
+                best_v, best_a = v, a
+        seed_s += time.time() - t0
+        t0 = time.time()
+        best_m, best_vc = core.best_subset(img, masks)
+        cached_s += time.time() - t0
+        max_ap_diff = max(max_ap_diff, abs(best_v - best_vc))
+        if core.mask_of(best_a) != best_m:
+            mismatches += 1
+    t0 = time.time()
+    for img in range(n_images):
+        core.best_subset(img, masks)
+    warm_s = time.time() - t0
+
+    out = {"n_providers": n_prov, "n_actions": len(actions),
+           "n_images": n_images, "n_pairs": n_pairs,
+           "seed_s": round(seed_s, 3), "cached_cold_s": round(cached_s, 3),
+           "cached_warm_s": round(warm_s, 4),
+           "speedup_cold": round(seed_s / max(cached_s, 1e-9), 2),
+           "speedup_warm": round(seed_s / max(warm_s, 1e-9), 1),
+           "best_subset_mismatches": mismatches,
+           "max_best_ap50_diff": max_ap_diff,
+           "cache": core.cache_sizes(), "stats": dict(core.stats)}
+    assert mismatches == 0, \
+        f"cached upper-bound picked different subsets on {mismatches} images"
+    _save("subset_cache", out)
+    _emit("subset_cache/seed", 1e6 * seed_s / n_pairs,
+          f"total={out['seed_s']}s")
+    _emit("subset_cache/cached_cold", 1e6 * cached_s / n_pairs,
+          f"speedup={out['speedup_cold']}x")
+    _emit("subset_cache/cached_warm", 1e6 * warm_s / n_pairs,
+          f"speedup={out['speedup_warm']}x")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Kernel microbenchmarks (CPU interpret mode — correctness-level timing)
 # ---------------------------------------------------------------------------
 
@@ -266,6 +340,7 @@ BENCHES = {
     "ensemble_combos": bench_ensemble_combos,
     "baselines": bench_baselines,
     "scalability": bench_scalability,
+    "subset_cache": bench_subset_cache,
     "kernels": bench_kernels,
 }
 

@@ -1,0 +1,151 @@
+"""Frozen seed-PR implementations of the subset-evaluation hot path.
+
+Copied verbatim from the seed commit (git 92348a8) so that
+``bench_subset_cache`` can measure the batched/cached core against the
+exact per-image, per-action path this repo started with — the numbers stay
+honest even as the live modules keep getting faster.  Do NOT "fix" or
+optimize this file; it is the baseline.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.ensemble.boxes import Detections, iou_matrix
+from repro.ensemble.voting import vote_filter
+
+RECALL_POINTS = np.linspace(0.0, 1.0, 101)
+IOU_GROUP_THR = 0.5
+
+
+# --- seed voting.group_detections ------------------------------------------
+
+def seed_group_detections(dets: Detections, *,
+                          iou_thr: float = IOU_GROUP_THR) -> List[np.ndarray]:
+    n = len(dets)
+    if n == 0:
+        return []
+    order = np.argsort(-dets.scores, kind="stable")
+    iou = iou_matrix(dets.boxes, dets.boxes)
+    groups: List[List[int]] = []
+    reps: List[int] = []
+    for i in order:
+        placed = False
+        for gi, rep in enumerate(reps):
+            if dets.labels[i] == dets.labels[rep] and iou[i, rep] > iou_thr:
+                groups[gi].append(int(i))
+                placed = True
+                break
+        if not placed:
+            groups.append([int(i)])
+            reps.append(int(i))
+    return [np.asarray(g, np.int64) for g in groups]
+
+
+# --- seed ablation.wbf ------------------------------------------------------
+
+def seed_wbf(dets: Detections, groups: List[np.ndarray], *,
+             n_models: int = 0) -> Detections:
+    if not groups:
+        return Detections.empty()
+    boxes, scores, labels, provs = [], [], [], []
+    for g in groups:
+        b = dets.boxes[g]
+        s = dets.scores[g]
+        w = s / max(float(np.sum(s)), 1e-12)
+        boxes.append(np.sum(b * w[:, None], axis=0))
+        sc = float(np.mean(s))
+        if n_models > 1:
+            if dets.providers is not None:
+                t = len(np.unique(dets.providers[g]))
+            else:
+                t = len(g)
+            sc *= min(t, n_models) / n_models
+        scores.append(sc)
+        labels.append(int(dets.labels[g[0]]))
+        provs.append(int(dets.providers[g[0]])
+                     if dets.providers is not None else 0)
+    return Detections(np.stack(boxes), np.asarray(scores, np.float32),
+                      np.asarray(labels, np.int32),
+                      np.asarray(provs, np.int32))
+
+
+# --- seed pipeline.ensemble_detections (affirmative-wbf path) ---------------
+
+def seed_ensemble_detections(per_provider: Sequence[Detections], *,
+                             voting: str = "affirmative",
+                             iou_thr: float = 0.5) -> Detections:
+    tagged = []
+    for i, d in enumerate(per_provider):
+        t = Detections(d.boxes, d.scores, d.labels)
+        t.providers = np.full(len(t), i, np.int32)
+        tagged.append(t)
+    merged = Detections.concat(tagged)
+    if len(merged) == 0:
+        return merged
+    groups = seed_group_detections(merged, iou_thr=iou_thr)
+    groups = vote_filter(merged, groups, method=voting,
+                         n_selected=len(per_provider))
+    return seed_wbf(merged, groups, n_models=len(per_provider))
+
+
+# --- seed metrics (average_precision / image_ap50) --------------------------
+
+def _seed_match_image(dt: Detections, gt: Detections, label: int,
+                      iou_thr: float):
+    di = np.where(dt.labels == label)[0]
+    gi = np.where(gt.labels == label)[0]
+    if len(di) == 0:
+        return np.zeros(0), np.zeros(0, bool), len(gi)
+    order = di[np.argsort(-dt.scores[di], kind="stable")]
+    tp = np.zeros(len(order), bool)
+    if len(gi):
+        iou = iou_matrix(dt.boxes[order], gt.boxes[gi])
+        taken = np.zeros(len(gi), bool)
+        for r in range(len(order)):
+            best, bj = iou_thr, -1
+            for c in range(len(gi)):
+                if not taken[c] and iou[r, c] >= best:
+                    best, bj = iou[r, c], c
+            if bj >= 0:
+                taken[bj] = True
+                tp[r] = True
+    return dt.scores[order], tp, len(gi)
+
+
+def seed_average_precision(dts, gts, *, iou_thr: float = 0.5) -> float:
+    labs = set()
+    for g in gts.values():
+        labs.update(np.unique(g.labels).tolist())
+    aps = []
+    for lab in sorted(labs):
+        scores, tps, n_gt = [], [], 0
+        for img, gt in gts.items():
+            dt = dts.get(img, Detections.empty())
+            s, t, n = _seed_match_image(dt, gt, lab, iou_thr)
+            scores.append(s)
+            tps.append(t)
+            n_gt += n
+        if n_gt == 0:
+            continue
+        scores = np.concatenate(scores)
+        tps = np.concatenate(tps)
+        order = np.argsort(-scores, kind="stable")
+        tps = tps[order]
+        tp_cum = np.cumsum(tps)
+        fp_cum = np.cumsum(~tps)
+        recall = tp_cum / n_gt
+        precision = tp_cum / np.maximum(tp_cum + fp_cum, 1e-12)
+        for i in range(len(precision) - 2, -1, -1):
+            precision[i] = max(precision[i], precision[i + 1])
+        ap = 0.0
+        for r in RECALL_POINTS:
+            idx = np.searchsorted(recall, r, side="left")
+            ap += precision[idx] if idx < len(precision) else 0.0
+        aps.append(ap / len(RECALL_POINTS))
+    return float(np.mean(aps)) if aps else 0.0
+
+
+def seed_image_ap50(dt: Detections, gt: Detections) -> float:
+    return seed_average_precision({0: dt}, {0: gt}, iou_thr=0.5)

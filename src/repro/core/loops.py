@@ -6,6 +6,13 @@ rollouts; at the end of every epoch the agent is evaluated deterministically
 on the held-out test episode (corpus AP50 + average cost + per-provider
 selection counts — the columns of Tab. II).  Baselines: Random-1, Random-N,
 Ensemble-N, and the brute-force Upper Bound (Algo. 2).
+
+Evaluation rides the memoized subset-evaluation core: ``evaluate_policy``
+computes all test-split actions in ONE agent forward pass (the MLP heads
+are batch-polymorphic) and reuses cached (image, subset) ensembles across
+epochs; ``upper_bound`` enumerates subsets in popcount order through the
+cache, paying for each image's IoU table exactly once instead of once per
+candidate subset.
 """
 from __future__ import annotations
 
@@ -17,28 +24,68 @@ import numpy as np
 
 from repro.core.ppo import PPO
 from repro.core.replay_buffer import ReplayBuffer
-from repro.ensemble.metrics import ap50, coco_map, image_ap50
+from repro.ensemble.metrics import ap50, coco_map
 from repro.federation.env import ArmolEnv
+from repro.federation.evaluation import mask_to_action, popcount_masks
 
 
 # ---------------------------------------------------------------------------
 # Evaluation (one "test episode" = the whole test split)
 # ---------------------------------------------------------------------------
 
+def agent_policy(agent, *, deterministic: bool = True
+                 ) -> Callable[[np.ndarray], np.ndarray]:
+    """Wrap an agent as a state->action policy with a batched fast path.
+
+    The returned callable maps one state to one binary action (the seed
+    contract); its ``select_batch`` attribute maps a (T, D) state matrix to
+    (T, N) actions in a single jitted forward pass.  Falls back to row-wise
+    calls when the agent's action head is not batch-polymorphic (e.g.
+    Wolpertinger re-ranking)."""
+    def single(s: np.ndarray) -> np.ndarray:
+        return agent.select_action(s, deterministic=deterministic)[0]
+
+    def select_batch(states: np.ndarray) -> np.ndarray:
+        try:
+            a = np.asarray(
+                agent.select_action(states, deterministic=deterministic)[0])
+            if a.ndim == 2 and a.shape[0] == len(states):
+                return a
+        except (TypeError, ValueError):
+            # non-batch-polymorphic action head (e.g. PPO's scalar logp,
+            # Wolpertinger re-ranking); anything else should propagate
+            pass
+        return np.stack([single(s) for s in states])
+
+    single.select_batch = select_batch
+    return single
+
+
+def _policy_actions(select_fn, env: ArmolEnv,
+                    img_indices: np.ndarray) -> np.ndarray:
+    """All actions for a set of images — one batched forward when the
+    policy supports it, else the seed's per-image calls."""
+    batch = getattr(select_fn, "select_batch", None)
+    if batch is not None:
+        return np.asarray(batch(env.features[img_indices]), np.float32)
+    return np.stack([np.asarray(select_fn(env.features[img]), np.float32)
+                     for img in img_indices])
+
+
 def evaluate_policy(select_fn: Callable[[np.ndarray], np.ndarray],
                     env: ArmolEnv, *, against: str = "gt") -> Dict:
     """select_fn(state) -> binary action.  Corpus AP vs the TRUE ground truth
     (evaluation always uses GT even for w/o-gt-trained agents, as in the
     paper's Tab. II)."""
+    actions = _policy_actions(select_fn, env, env.test_idx)
+    env.core.precompute(env.test_idx)
     dts, gts = {}, {}
     counts = np.zeros(env.n_providers, np.int64)
     total_cost = 0.0
-    for img in env.test_idx:
-        s = env.features[img]
-        a = select_fn(s)
+    for img, a in zip(env.test_idx, actions):
         counts += (a > 0.5).astype(np.int64)
         total_cost += float(np.sum(env.costs * (a > 0.5)))
-        dts[int(img)] = env.ensemble_for(int(img), a)
+        dts[int(img)] = env.core.ensemble(int(img), env.core.mask_of(a))
         gts[int(img)] = env.traces.gts[int(img)]
     n = max(len(env.test_idx), 1)
     return {"ap50": 100.0 * ap50(dts, gts), "map": 100.0 * coco_map(dts, gts),
@@ -78,8 +125,7 @@ def run_off_policy(agent, env: ArmolEnv, *, epochs: int = 5,
             if total >= update_after and total % update_every == 0:
                 for _ in range(update_iters):
                     agent.update(buf.sample(batch_size))
-        res = evaluate_policy(
-            lambda st: agent.select_action(st, deterministic=True)[0], env)
+        res = evaluate_policy(agent_policy(agent), env)
         res.update({"epoch": epoch, "steps": total,
                     "wall_s": round(time.time() - t0, 1)})
         history.append(res)
@@ -121,8 +167,7 @@ def run_ppo(agent: PPO, env: ArmolEnv, *, epochs: int = 5,
                    "logp": np.asarray(LP, np.float32),
                    "adv": adv, "ret": ret}
         agent.update_from_rollout(rollout)
-        res = evaluate_policy(
-            lambda st: agent.select_action(st, deterministic=True)[0], env)
+        res = evaluate_policy(agent_policy(agent), env)
         res.update({"epoch": epoch, "wall_s": round(time.time() - t0, 1)})
         history.append(res)
         if log:
@@ -162,31 +207,39 @@ def ensembleN_policy(env: ArmolEnv):
     return f
 
 
+def enumeration_actions(n: int) -> List[np.ndarray]:
+    """The Algo.-2 candidate list: all non-empty binary vectors, stable-
+    sorted by popcount (ties keep itertools.product order, matching the
+    seed's tie-breaking toward cheaper-first enumeration)."""
+    actions = [np.asarray(a, np.float32)
+               for a in itertools.product([0, 1], repeat=n) if any(a)]
+    actions.sort(key=lambda a: (a.sum(),))
+    return actions
+
+
 def upper_bound(env: ArmolEnv) -> Dict:
     """Brute force (Algo. 2): per test image, the best action by per-image
     AP50; ties broken toward the cheaper subset (enumeration in increasing
-    popcount order, strict improvement required)."""
+    popcount order, strict improvement required).
+
+    Enumerates through the subset-evaluation cache: each image pays for its
+    IoU table once, every subset's ensemble is an O(1) slice + grouping,
+    and single-provider entries seed the memo for later callers.
+    """
     n = env.n_providers
-    actions = []
-    for a in itertools.product([0, 1], repeat=n):
-        if any(a):
-            actions.append(np.asarray(a, np.float32))
-    actions.sort(key=lambda a: (a.sum(),))
+    masks = popcount_masks(n)
+    action_of = {m: mask_to_action(m, n) for m in masks}
+    env.core.precompute(env.test_idx)
     dts, gts = {}, {}
     counts = np.zeros(n, np.int64)
     total_cost = 0.0
     for img in env.test_idx:
-        best_v, best_a, best_d = -1.0, None, None
-        gt = env.traces.gts[int(img)]
-        for a in actions:
-            d = env.ensemble_for(int(img), a)
-            v = image_ap50(d, gt)
-            if v > best_v:
-                best_v, best_a, best_d = v, a, d
+        best_m, _ = env.core.best_subset(int(img), masks, against="gt")
+        best_a = action_of[best_m]
         counts += (best_a > 0.5).astype(np.int64)
         total_cost += float(np.sum(env.costs * (best_a > 0.5)))
-        dts[int(img)] = best_d
-        gts[int(img)] = gt
+        dts[int(img)] = env.core.ensemble(int(img), best_m)
+        gts[int(img)] = env.traces.gts[int(img)]
     m = max(len(env.test_idx), 1)
     return {"ap50": 100.0 * ap50(dts, gts), "map": 100.0 * coco_map(dts, gts),
             "cost": total_cost / m, "counts": counts.tolist(), "n_images": m}

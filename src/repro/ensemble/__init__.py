@@ -1,6 +1,8 @@
 from repro.ensemble.boxes import Detections, iou_matrix  # noqa: F401
 from repro.ensemble.voting import group_detections, vote_filter  # noqa: F401
 from repro.ensemble.ablation import nms, soft_nms, wbf  # noqa: F401
-from repro.ensemble.pipeline import ensemble_detections, PATHWAYS  # noqa: F401
+from repro.ensemble.pipeline import (ensemble_detections,  # noqa: F401
+                                     ensemble_detections_batch,
+                                     ensemble_from_arrays, PATHWAYS)
 from repro.ensemble.metrics import (average_precision, ap50, coco_map,  # noqa: F401
                                     image_ap50)

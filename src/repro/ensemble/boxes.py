@@ -31,6 +31,16 @@ class Detections:
         return len(self.scores)
 
     @staticmethod
+    def fast(boxes: np.ndarray, scores: np.ndarray, labels: np.ndarray,
+             providers: Optional[np.ndarray] = None) -> "Detections":
+        """No-validation constructor for hot paths: arrays must already be
+        float32 (n,4) / float32 (n,) / int32 (n,) [/ int32 (n,)]."""
+        d = object.__new__(Detections)
+        d.boxes, d.scores, d.labels, d.providers = boxes, scores, labels, \
+            providers
+        return d
+
+    @staticmethod
     def empty() -> "Detections":
         return Detections(np.zeros((0, 4), np.float32),
                           np.zeros((0,), np.float32),

@@ -1,8 +1,23 @@
 """The 12 ensemble pathways: {affirmative,consensus,unanimous} voting x
-{none,nms,soft-nms,wbf} ablation.  Paper default: Affirmative-WBF."""
+{none,nms,soft-nms,wbf} ablation.  Paper default: Affirmative-WBF.
+
+Two entry points:
+
+  * ``ensemble_detections``        — one image, a list of per-provider
+    ``Detections`` (the seed API, kept verbatim for callers and tests).
+  * ``ensemble_detections_batch``  — many images in one call, array-first:
+    merged arrays + one (optionally Pallas-kernel-backed) pairwise-IoU
+    matrix per image, shared across the grouping/voting/ablation stages.
+
+Both funnel into ``ensemble_from_arrays``, the array-first core used by the
+subset-evaluation cache (``repro.federation.evaluation``) which slices a
+single per-image IoU matrix across all candidate provider subsets.
+"""
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence, Union
+
+import numpy as np
 
 from repro.ensemble.ablation import nms, soft_nms, wbf
 from repro.ensemble.boxes import Detections
@@ -14,30 +29,40 @@ PATHWAYS = [(v, a) for v in VOTING for a in ABLATION]
 DEFAULT = ("affirmative", "wbf")
 
 
-def ensemble_detections(per_provider: Sequence[Detections], *,
-                        voting: str = "affirmative", ablation: str = "wbf",
-                        iou_thr: float = 0.5,
-                        use_kernel: bool = False) -> Detections:
-    """Merge detections from the selected providers (paper Sec. IV-D).
+def resolve_use_kernel(use_kernel: Union[bool, str]) -> bool:
+    """``"auto"`` -> Pallas IoU kernel on accelerator backends, numpy twin
+    on CPU (where interpret-mode Pallas is orders of magnitude slower and
+    the numpy reference is the kernel's bitwise oracle anyway)."""
+    if use_kernel == "auto":
+        import jax
+        return jax.default_backend() != "cpu"
+    return bool(use_kernel)
 
-    ``per_provider[i]`` is provider i's detections for one image, with
-    labels already mapped to canonical group ids by the word-grouping stage.
+
+def ensemble_from_arrays(boxes: np.ndarray, scores: np.ndarray,
+                         labels: np.ndarray, providers: np.ndarray,
+                         n_selected: int, *, voting: str = "affirmative",
+                         ablation: str = "wbf", iou_thr: float = 0.5,
+                         use_kernel: bool = False,
+                         iou: Optional[np.ndarray] = None) -> Detections:
+    """Array-first ensemble core: merged per-image arrays in, fused out.
+
+    ``providers`` tags each detection with its position in the selected
+    subset (0..n_selected-1); ``iou`` optionally supplies the precomputed
+    pairwise IoU of ``boxes`` so batched/cached callers pay for it once.
+    Arrays must already be normalized (float32 boxes/scores, int32 labels/
+    providers) — every caller slices or concatenates normalized
+    ``Detections`` storage.
     """
-    tagged = []
-    for i, d in enumerate(per_provider):
-        t = Detections(d.boxes, d.scores, d.labels)
-        import numpy as np
-        t.providers = np.full(len(t), i, np.int32)
-        tagged.append(t)
-    merged = Detections.concat(tagged)
+    merged = Detections.fast(boxes, scores, labels, providers)
     if len(merged) == 0:
         return merged
-    groups = group_detections(merged, iou_thr=iou_thr, use_kernel=use_kernel)
+    groups = group_detections(merged, iou_thr=iou_thr,
+                              use_kernel=use_kernel, iou=iou)
     groups = vote_filter(merged, groups, method=voting,
-                         n_selected=len(per_provider))
+                         n_selected=n_selected)
     if ablation == "wbf":
-        return wbf(merged, groups, n_models=len(per_provider))
-    import numpy as np
+        return wbf(merged, groups, n_models=n_selected)
     if not groups:
         return Detections.empty()
     kept = merged.take(np.concatenate(groups))
@@ -48,3 +73,95 @@ def ensemble_detections(per_provider: Sequence[Detections], *,
     if ablation == "softnms":
         return soft_nms(kept)
     raise ValueError(ablation)
+
+
+def merge_provider_detections(per_provider: Sequence[Detections]):
+    """Concat per-provider detections into merged arrays, tagging each row
+    with its position in the selection (the single source of truth for the
+    merged-array layout shared by the direct, batched, and cached paths).
+    Returns (boxes, scores, labels, providers); ``per_provider`` must be
+    non-empty."""
+    boxes = np.concatenate([d.boxes for d in per_provider], axis=0)
+    scores = np.concatenate([d.scores for d in per_provider])
+    labels = np.concatenate([d.labels for d in per_provider])
+    providers = np.repeat(np.arange(len(per_provider), dtype=np.int32),
+                          [len(d) for d in per_provider])
+    return boxes, scores, labels, providers
+
+
+def ensemble_detections(per_provider: Sequence[Detections], *,
+                        voting: str = "affirmative", ablation: str = "wbf",
+                        iou_thr: float = 0.5,
+                        use_kernel: bool = False) -> Detections:
+    """Merge detections from the selected providers (paper Sec. IV-D).
+
+    ``per_provider[i]`` is provider i's detections for one image, with
+    labels already mapped to canonical group ids by the word-grouping stage.
+    """
+    if not per_provider:
+        return Detections.empty()
+    boxes, scores, labels, providers = \
+        merge_provider_detections(per_provider)
+    return ensemble_from_arrays(boxes, scores, labels, providers,
+                                len(per_provider), voting=voting,
+                                ablation=ablation, iou_thr=iou_thr,
+                                use_kernel=use_kernel)
+
+
+def batch_iou_matrices(boxes_list: Sequence[np.ndarray], *,
+                       use_kernel: Union[bool, str] = "auto"
+                       ) -> List[np.ndarray]:
+    """Pairwise self-IoU for a batch of images in one launch.
+
+    Kernel path pads every image's boxes to the batch max and runs a single
+    vmapped Pallas call (one compile per padded shape); numpy path computes
+    per image (padding would cost more than it saves on CPU).
+    """
+    from repro.ensemble.boxes import iou_matrix
+    if not boxes_list:
+        return []
+    if resolve_use_kernel(use_kernel):
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.iou_matrix.kernel import iou_matrix_pallas
+        nmax = max(int(b.shape[0]) for b in boxes_list)
+        if nmax == 0:
+            return [np.zeros((0, 0), np.float32) for _ in boxes_list]
+        padded = np.zeros((len(boxes_list), nmax, 4), np.float32)
+        for i, b in enumerate(boxes_list):
+            padded[i, :len(b)] = b
+        interpret = jax.default_backend() == "cpu"
+        full = jax.vmap(lambda b: iou_matrix_pallas(
+            b, b, interpret=interpret))(jnp.asarray(padded))
+        full = np.asarray(full)
+        return [full[i, :len(b), :len(b)] for i, b in enumerate(boxes_list)]
+    return [iou_matrix(b, b) if len(b) else np.zeros((0, 0), np.float32)
+            for b in boxes_list]
+
+
+def ensemble_detections_batch(per_image: Sequence[Sequence[Detections]], *,
+                              voting: str = "affirmative",
+                              ablation: str = "wbf", iou_thr: float = 0.5,
+                              use_kernel: Union[bool, str] = "auto"
+                              ) -> List[Detections]:
+    """Ensemble a whole split of images in one call.
+
+    ``per_image[t]`` is the list of selected providers' ``Detections`` for
+    image t.  All pairwise-IoU matrices are computed up front in one batched
+    launch (Pallas kernel on accelerators), then the grouping greedy runs
+    over each precomputed matrix.
+    """
+    merged_arrays = []
+    for sel in per_image:
+        if sel:
+            boxes, scores, labels, provs = merge_provider_detections(sel)
+        else:
+            e = Detections.empty()
+            boxes, scores, labels, provs = e.boxes, e.scores, e.labels, \
+                e.providers
+        merged_arrays.append((boxes, scores, labels, provs, len(sel)))
+    ious = batch_iou_matrices([m[0] for m in merged_arrays],
+                              use_kernel=use_kernel)
+    return [ensemble_from_arrays(b, s, l, p, k, voting=voting,
+                                 ablation=ablation, iou_thr=iou_thr, iou=iou)
+            for (b, s, l, p, k), iou in zip(merged_arrays, ious)]

@@ -10,7 +10,7 @@ canonical label.  Groups are then kept by the voting rule:
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -20,35 +20,49 @@ IOU_GROUP_THR = 0.5
 
 
 def group_detections(dets: Detections, *, iou_thr: float = IOU_GROUP_THR,
-                     use_kernel: bool = False) -> List[np.ndarray]:
+                     use_kernel: bool = False,
+                     iou: Optional[np.ndarray] = None) -> List[np.ndarray]:
     """Greedy clustering by (label, IoU>thr).  Returns index arrays.
 
     Detections are visited in descending score order; each joins the first
     existing group whose *representative* (highest-score member) matches.
-    ``use_kernel=True`` routes the pairwise IoU through the Pallas kernel
-    wrapper (interpret mode on CPU).
+    ``iou`` supplies a precomputed (n, n) pairwise IoU matrix (the batched
+    subset-evaluation core slices one kernel-backed matrix per image across
+    all candidate subsets); otherwise it is computed here. ``use_kernel=True``
+    routes that computation through the Pallas kernel wrapper (interpret
+    mode on CPU).
     """
     n = len(dets)
     if n == 0:
         return []
-    order = np.argsort(-dets.scores, kind="stable")
-    if use_kernel:
-        from repro.kernels.iou_matrix.ops import iou_matrix_op
-        iou = np.asarray(iou_matrix_op(dets.boxes, dets.boxes))
-    else:
-        iou = iou_matrix(dets.boxes, dets.boxes)
+    order = np.argsort(-dets.scores, kind="stable").tolist()
+    if iou is None:
+        if use_kernel:
+            from repro.kernels.iou_matrix.ops import iou_matrix_op
+            iou = np.asarray(iou_matrix_op(dets.boxes, dets.boxes))
+        else:
+            iou = iou_matrix(dets.boxes, dets.boxes)
+    # per-subset merged sets are small (tens of boxes): python-scalar greedy
+    # over list-converted rows beats numpy-indexed scalars ~10x here
+    iou_rows = iou.tolist()
+    labels = dets.labels.tolist()
+    thr = float(iou_thr)
     groups: List[List[int]] = []
     reps: List[int] = []
+    rep_labels: List[int] = []
     for i in order:
+        li = labels[i]
+        row = iou_rows[i]
         placed = False
-        for gi, rep in enumerate(reps):
-            if dets.labels[i] == dets.labels[rep] and iou[i, rep] > iou_thr:
-                groups[gi].append(int(i))
+        for gi in range(len(reps)):
+            if rep_labels[gi] == li and row[reps[gi]] > thr:
+                groups[gi].append(i)
                 placed = True
                 break
         if not placed:
-            groups.append([int(i)])
-            reps.append(int(i))
+            groups.append([i])
+            reps.append(i)
+            rep_labels.append(li)
     return [np.asarray(g, np.int64) for g in groups]
 
 

@@ -3,3 +3,6 @@ from repro.federation.providers import ProviderProfile, default_providers, \
     scalability_providers  # noqa: F401
 from repro.federation.traces import TraceSet, generate_traces  # noqa: F401
 from repro.federation.env import ArmolEnv  # noqa: F401
+from repro.federation.evaluation import (SubsetEvaluationCore,  # noqa: F401
+                                         action_to_mask, mask_to_action,
+                                         popcount_masks)

@@ -9,18 +9,23 @@ Reward : r_t = v_t + beta * c_t  with v_t = per-image AP50 of the ensembled
 Modes  : "gt"   — AP against ground truth (Armol-w/ gt)
          "nogt" — AP against the pseudo ground truth: the ensemble of ALL
                   providers' predictions (Armol-w/o gt).
+
+All subset evaluation goes through the memoized ``SubsetEvaluationCore``
+(``repro.federation.evaluation``): repeated (image, action) pairs — the
+normal case over a multi-epoch training run — cost one dict lookup, and the
+vectorized ``evaluate_actions`` / ``step_batch`` paths evaluate whole
+batches against precomputed per-image IoU tables.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 
 from repro.core.networks import extract_features, init_feature_extractor
 from repro.ensemble.boxes import Detections
-from repro.ensemble.metrics import image_ap50
-from repro.ensemble.pipeline import ensemble_detections
+from repro.federation.evaluation import SubsetEvaluationCore
 from repro.federation.traces import TraceSet
 
 FEATURE_SEED = 7
@@ -30,7 +35,8 @@ class ArmolEnv:
     def __init__(self, traces: TraceSet, *, mode: str = "gt",
                  beta: float = 0.0, voting: str = "affirmative",
                  ablation: str = "wbf", train_frac: float = 0.7,
-                 seed: int = 0, feat_dim: int = 64):
+                 seed: int = 0, feat_dim: int = 64,
+                 use_kernel: Union[bool, str] = "auto"):
         assert mode in ("gt", "nogt")
         self.traces = traces
         self.mode = mode
@@ -40,6 +46,8 @@ class ArmolEnv:
         self.rng = np.random.default_rng(seed)
         self.n_providers = traces.n_providers
         self.costs = traces.costs()
+        self.core = SubsetEvaluationCore(
+            traces, voting=voting, ablation=ablation, use_kernel=use_kernel)
 
         # --- state features (precomputed once, like the paper's MobileNet):
         # conv-stack embedding + category-sensitive matched-filter responses
@@ -59,18 +67,16 @@ class ArmolEnv:
         self.train_idx = np.arange(0, split)
         self.test_idx = np.arange(split, n)
 
-        # pseudo ground truth cache (ensemble of all providers)
-        self._pseudo: Dict[int, Detections] = {}
         self._order: np.ndarray = self.train_idx
         self._t = 0
 
+    @property
+    def _against(self) -> str:
+        return "gt" if self.mode == "gt" else "pseudo"
+
     # ------------------------------------------------------------------
     def pseudo_gt(self, img_idx: int) -> Detections:
-        if img_idx not in self._pseudo:
-            self._pseudo[img_idx] = ensemble_detections(
-                self.traces.dets[img_idx], voting=self.voting,
-                ablation=self.ablation)
-        return self._pseudo[img_idx]
+        return self.core.pseudo_gt(img_idx)
 
     def reference_gt(self, img_idx: int) -> Detections:
         if self.mode == "gt":
@@ -78,22 +84,23 @@ class ArmolEnv:
         return self.pseudo_gt(img_idx)
 
     def ensemble_for(self, img_idx: int, action: np.ndarray) -> Detections:
-        sel = [self.traces.dets[img_idx][i]
-               for i in range(self.n_providers) if action[i] > 0.5]
-        if not sel:
-            return Detections.empty()
-        return ensemble_detections(sel, voting=self.voting,
-                                   ablation=self.ablation)
+        return self.core.ensemble(img_idx, self.core.mask_of(action))
 
     def evaluate_action(self, img_idx: int,
                         action: np.ndarray) -> Tuple[float, float, float]:
         """Returns (reward, v=AP50, cost_milli_usd) for one image."""
-        ens = self.ensemble_for(img_idx, action)
-        cost = float(np.sum(self.costs * (action > 0.5)))
-        if len(ens) == 0:
-            return -1.0, 0.0, cost
-        v = image_ap50(ens, self.reference_gt(img_idx))
-        return v + self.beta * cost, v, cost
+        return self.core.evaluate(img_idx, action, beta=self.beta,
+                                  against=self._against)
+
+    def evaluate_actions(self, img_indices: Sequence[int],
+                         actions: np.ndarray) -> Dict[str, np.ndarray]:
+        """Vectorized evaluate_action over a batch of (image, action)
+        pairs: returns {"reward", "ap50", "cost", "mask"} arrays of shape
+        (B,).  Per-image IoU tables are precomputed in one batched launch
+        on the kernel path and cached for later single-pair calls."""
+        return self.core.evaluate_batch(img_indices, actions,
+                                        beta=self.beta,
+                                        against=self._against)
 
     # ------------------------------------------------------------------
     def reset(self, *, split: str = "train",
@@ -114,3 +121,25 @@ class ArmolEnv:
         done = self._t >= len(self._order)
         nxt = self.features[self._order[min(self._t, len(self._order) - 1)]]
         return nxt, reward, done, {"ap50": v, "cost": cost, "image": img}
+
+    def step_batch(self, actions: np.ndarray):
+        """Consume the next B steps of the episode in one vectorized call.
+
+        ``actions`` is (B, N); B is clipped to the steps remaining in the
+        episode.  Returns (next_states (B', D), rewards (B',), dones (B',),
+        infos) where infos carries per-step arrays like ``step``'s dict.
+        """
+        actions = np.asarray(actions, np.float32).reshape(
+            -1, self.n_providers)
+        remaining = len(self._order) - self._t
+        B = min(len(actions), remaining)
+        imgs = self._order[self._t:self._t + B]
+        out = self.evaluate_actions(imgs, actions[:B])
+        self._t += B
+        done_t = np.arange(self._t - B + 1, self._t + 1) >= len(self._order)
+        nxt_pos = np.minimum(np.arange(self._t - B + 1, self._t + 1),
+                             len(self._order) - 1)
+        nxt = self.features[self._order[nxt_pos]]
+        infos = {"ap50": out["ap50"], "cost": out["cost"],
+                 "image": np.asarray(imgs, np.int64)}
+        return nxt, out["reward"], done_t, infos

@@ -1,0 +1,291 @@
+"""Batched, memoized subset-evaluation core — the hot path of Armol.
+
+Every layer of the system (env rewards, policy evaluation, the Algo.-2
+upper bound, the serving fan-out, benchmarks) ultimately asks the same
+question: *for image t and provider subset S, what are the ensembled
+detections, the per-image AP50, and the cost?*  The seed answered it from
+scratch each time — re-tagging Detections, recomputing the pairwise IoU of
+the merged boxes, regrouping, re-fusing — per image, per action, in Python.
+
+This module computes each distinct answer once:
+
+  * per image, ONE concatenated detection table over all N providers and
+    ONE pairwise IoU matrix (Pallas kernel on accelerators, numpy twin on
+    CPU); every subset's merged arrays and IoU submatrix are O(1) slices,
+  * per (image, subset-bitmask), the ensembled ``Detections`` and per-image
+    AP50 (vs GT and/or pseudo-GT) are memoized,
+  * a batch API evaluates whole splits of images x actions in one call,
+    with all IoU matrices precomputed in one batched kernel launch.
+
+Subsets are keyed by bitmask: bit i set <=> provider i selected, so the
+2^N - 1 actions of the paper's combinatorial space index a flat dict.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.ensemble.boxes import Detections, iou_matrix
+from repro.ensemble.metrics import image_ap50
+from repro.ensemble.pipeline import (ensemble_from_arrays,
+                                     merge_provider_detections,
+                                     resolve_use_kernel)
+from repro.federation.traces import TraceSet
+
+
+def action_to_mask(action: np.ndarray) -> int:
+    """Binary action vector -> subset bitmask (bit i = provider i)."""
+    bits = np.asarray(action).reshape(-1) > 0.5
+    return int(np.sum(np.left_shift(1, np.nonzero(bits)[0])))
+
+
+def mask_to_action(mask: int, n: int) -> np.ndarray:
+    return np.asarray([(mask >> i) & 1 for i in range(n)], np.float32)
+
+
+def popcount_masks(n: int) -> List[int]:
+    """All non-empty subset masks of {0..n-1} in increasing popcount order.
+
+    Within one popcount, masks keep the order of the seed's Algo.-2
+    enumeration (lexicographic over the action tuple, stable-sorted by
+    popcount) so tie-breaking matches the uncached upper bound exactly.
+    """
+    masks = []
+    for m in range(1, 1 << n):
+        # the seed enumerates itertools.product tuples a=(a_0..a_{n-1});
+        # tuple order corresponds to the integer with a_0 as the HIGH bit
+        masks.append(m)
+    # reconstruct seed order: product order == ascending on reversed bits
+    def revbits(m: int) -> int:
+        return int(sum(((m >> i) & 1) << (n - 1 - i) for i in range(n)))
+    masks.sort(key=lambda m: (bin(m).count("1"), revbits(m)))
+    return masks
+
+
+@dataclass
+class _ImageTable:
+    """Per-image precompute shared by every subset of that image."""
+    boxes: np.ndarray          # (n_all, 4) all providers, provider order
+    scores: np.ndarray         # (n_all,)
+    labels: np.ndarray         # (n_all,)
+    lengths: np.ndarray        # (N,) detections per provider
+    row_provider: np.ndarray   # (n_all,) owning provider of each row
+    iou: np.ndarray            # (n_all, n_all) pairwise IoU, computed once
+
+    def subset_indices(self, bits: np.ndarray) -> np.ndarray:
+        """Rows belonging to the selected providers (ascending, i.e. the
+        same provider-block order as a fresh concat)."""
+        return np.flatnonzero(bits[self.row_provider])
+
+
+class SubsetEvaluationCore:
+    """Cache + batch evaluator for (image, provider-subset) ensembles.
+
+    One instance per (traces, voting, ablation, iou_thr) configuration —
+    exactly the knobs that change the ensemble output.  ``use_kernel`` is
+    ``"auto"`` (Pallas IoU kernel on accelerator backends, numpy twin on
+    CPU), or an explicit bool.
+    """
+
+    def __init__(self, traces: TraceSet, *, voting: str = "affirmative",
+                 ablation: str = "wbf", iou_thr: float = 0.5,
+                 use_kernel: Union[bool, str] = "auto"):
+        self.traces = traces
+        self.voting = voting
+        self.ablation = ablation
+        self.iou_thr = iou_thr
+        self.use_kernel = resolve_use_kernel(use_kernel)
+        self.n_providers = traces.n_providers
+        self.costs = traces.costs()
+        self.full_mask = (1 << self.n_providers) - 1
+        self._tables: Dict[int, _ImageTable] = {}
+        self._masks: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._ens: Dict[Tuple[int, int], Detections] = {}
+        self._ap: Dict[Tuple[int, int, str], float] = {}
+        self._cost: Dict[int, float] = {}
+        self.stats = {"ens_hits": 0, "ens_misses": 0,
+                      "ap_hits": 0, "ap_misses": 0, "tables": 0}
+
+    # -- per-image table ------------------------------------------------
+    def _full_iou(self, boxes: np.ndarray) -> np.ndarray:
+        if len(boxes) == 0:
+            return np.zeros((0, 0), np.float32)
+        if self.use_kernel:
+            from repro.kernels.iou_matrix.ops import iou_matrix_op
+            return np.asarray(iou_matrix_op(boxes, boxes))
+        return iou_matrix(boxes, boxes)
+
+    def _build_table(self, img_idx: int,
+                     iou: Optional[np.ndarray] = None) -> _ImageTable:
+        dets = self.traces.dets[img_idx]
+        lengths = np.asarray([len(d) for d in dets], np.int64)
+        # full-set merge: positional tags coincide with true provider ids
+        boxes, scores, labels, row_provider = \
+            merge_provider_detections(dets)
+        if iou is None:
+            iou = self._full_iou(boxes)
+        self.stats["tables"] += 1
+        return _ImageTable(boxes, scores, labels, lengths, row_provider, iou)
+
+    def table(self, img_idx: int) -> _ImageTable:
+        t = self._tables.get(img_idx)
+        if t is None:
+            t = self._tables[img_idx] = self._build_table(img_idx)
+        return t
+
+    def precompute(self, img_indices: Sequence[int]) -> None:
+        """Build tables for many images; IoU matrices go through one batched
+        kernel launch on the kernel path."""
+        missing = [int(i) for i in img_indices if int(i) not in self._tables]
+        if not missing:
+            return
+        if self.use_kernel:
+            from repro.ensemble.pipeline import batch_iou_matrices
+            boxes_list = [
+                np.concatenate([d.boxes for d in self.traces.dets[i]],
+                               axis=0) for i in missing]
+            ious = batch_iou_matrices(boxes_list, use_kernel=True)
+            for i, iou in zip(missing, ious):
+                self._tables[i] = self._build_table(i, iou=iou)
+        else:
+            for i in missing:
+                self._tables[i] = self._build_table(i)
+
+    # -- memoized single-pair evaluation --------------------------------
+    def mask_of(self, action: np.ndarray) -> int:
+        return action_to_mask(action)
+
+    def _mask_info(self, mask: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(selected provider ids, N-length bool bits) — memoized per mask."""
+        hit = self._masks.get(mask)
+        if hit is None:
+            bits = np.asarray([(mask >> i) & 1
+                               for i in range(self.n_providers)], bool)
+            hit = self._masks[mask] = (np.flatnonzero(bits), bits)
+        return hit
+
+    def selected(self, mask: int) -> np.ndarray:
+        return self._mask_info(mask)[0]
+
+    def cost(self, mask: int) -> float:
+        c = self._cost.get(mask)
+        if c is None:
+            bits = self._mask_info(mask)[1]
+            c = self._cost[mask] = float(np.sum(self.costs * bits))
+        return c
+
+    def ensemble(self, img_idx: int, mask: int) -> Detections:
+        key = (img_idx, mask)
+        hit = self._ens.get(key)
+        if hit is not None:
+            self.stats["ens_hits"] += 1
+            return hit
+        self.stats["ens_misses"] += 1
+        if mask == 0:
+            ens = Detections.empty()
+        else:
+            t = self.table(img_idx)
+            sel, bits = self._mask_info(mask)
+            idx = t.subset_indices(bits)
+            providers = np.repeat(
+                np.arange(len(sel), dtype=np.int32), t.lengths[sel])
+            ens = ensemble_from_arrays(
+                t.boxes[idx], t.scores[idx], t.labels[idx], providers,
+                len(sel), voting=self.voting, ablation=self.ablation,
+                iou_thr=self.iou_thr, iou=t.iou[idx[:, None], idx])
+        self._ens[key] = ens
+        return ens
+
+    def pseudo_gt(self, img_idx: int) -> Detections:
+        """Ensemble of ALL providers — the w/o-gt reference (paper Sec. III)."""
+        return self.ensemble(img_idx, self.full_mask)
+
+    def reference(self, img_idx: int, against: str) -> Detections:
+        if against == "gt":
+            return self.traces.gts[img_idx]
+        if against == "pseudo":
+            return self.pseudo_gt(img_idx)
+        raise ValueError(against)
+
+    def ap50(self, img_idx: int, mask: int, *, against: str = "gt") -> float:
+        key = (img_idx, mask, against)
+        hit = self._ap.get(key)
+        if hit is not None:
+            self.stats["ap_hits"] += 1
+            return hit
+        self.stats["ap_misses"] += 1
+        ens = self.ensemble(img_idx, mask)
+        v = (image_ap50(ens, self.reference(img_idx, against))
+             if len(ens) else 0.0)
+        self._ap[key] = v
+        return v
+
+    def evaluate(self, img_idx: int, action: np.ndarray, *,
+                 beta: float = 0.0,
+                 against: str = "gt") -> Tuple[float, float, float]:
+        """(reward, v=AP50, cost) with Eq.-5 semantics: r=-1 on empty."""
+        mask = self.mask_of(action)
+        cost = self.cost(mask)
+        ens = self.ensemble(img_idx, mask)
+        if len(ens) == 0:
+            return -1.0, 0.0, cost
+        v = self.ap50(img_idx, mask, against=against)
+        return v + beta * cost, v, cost
+
+    # -- batch APIs ------------------------------------------------------
+    def evaluate_batch(self, img_indices: Sequence[int],
+                       actions: np.ndarray, *, beta: float = 0.0,
+                       against: str = "gt") -> Dict[str, np.ndarray]:
+        """Evaluate action[t] on image img_indices[t] for a whole batch.
+
+        Returns dict of (B,) arrays: reward, ap50, cost, plus the per-pair
+        subset masks.  Tables for all images are precomputed first (one
+        batched IoU launch on the kernel path); repeated (image, mask)
+        pairs hit the memo.
+        """
+        imgs = [int(i) for i in img_indices]
+        if not imgs:
+            z = np.zeros(0, np.float64)
+            return {"reward": z, "ap50": z.copy(), "cost": z.copy(),
+                    "mask": np.zeros(0, np.int64)}
+        actions = np.asarray(actions, np.float32).reshape(len(imgs), -1)
+        self.precompute(imgs)
+        B = len(imgs)
+        reward = np.zeros(B, np.float64)
+        ap = np.zeros(B, np.float64)
+        cost = np.zeros(B, np.float64)
+        masks = np.zeros(B, np.int64)
+        for t, (img, a) in enumerate(zip(imgs, actions)):
+            r, v, c = self.evaluate(img, a, beta=beta, against=against)
+            reward[t], ap[t], cost[t], masks[t] = r, v, c, \
+                self.mask_of(a)
+        return {"reward": reward, "ap50": ap, "cost": cost, "mask": masks}
+
+    def ensemble_batch(self, img_indices: Sequence[int],
+                       actions: np.ndarray) -> List[Detections]:
+        imgs = [int(i) for i in img_indices]
+        if not imgs:
+            return []
+        actions = np.asarray(actions, np.float32).reshape(len(imgs), -1)
+        self.precompute(imgs)
+        return [self.ensemble(img, self.mask_of(a))
+                for img, a in zip(imgs, actions)]
+
+    def best_subset(self, img_idx: int, masks: Sequence[int], *,
+                    against: str = "gt") -> Tuple[int, float]:
+        """First strict-improvement argmax over ``masks`` (Algo.-2 order):
+        enumerate in the given order, keep a candidate only when its AP50
+        strictly beats the incumbent — cheaper subsets (earlier in popcount
+        order) win ties."""
+        best_v, best_m = -1.0, masks[0]
+        for m in masks:
+            v = self.ap50(img_idx, m, against=against)
+            if v > best_v:
+                best_v, best_m = v, m
+        return best_m, best_v
+
+    def cache_sizes(self) -> Dict[str, int]:
+        return {"tables": len(self._tables), "ensembles": len(self._ens),
+                "ap_entries": len(self._ap)}

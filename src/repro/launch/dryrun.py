@@ -63,6 +63,8 @@ def run_one(arch_id: str, shape_id: str, *, multi_pod: bool,
             compiled = lowered.compile()
         rec["lower_compile_s"] = round(time.time() - t0, 1)
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):       # older jax: list of dicts
+            ca = ca[0] if ca else {}
         rec["flops_per_dev"] = float(ca.get("flops", 0.0))
         rec["bytes_per_dev"] = float(ca.get("bytes accessed", 0.0))
         ma = compiled.memory_analysis()

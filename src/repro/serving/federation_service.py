@@ -7,16 +7,20 @@ full path: image -> features -> SAC proto action -> tau -> fan-out to the
 selected providers -> word grouping -> ensemble -> final detections,
 with per-request cost/latency accounting (inference latency is the max
 over selected providers + per-provider transmission, Sec. II-B).
+
+``handle_many`` is the batch path for heavy traffic: ONE agent forward
+pass over all request features, one batched IoU precompute, then per-
+request assembly from the memoized subset-evaluation core — repeat images
+and repeat (image, subset) pairs cost a dict lookup.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import List, Sequence
 
 import numpy as np
 
 from repro.ensemble.boxes import Detections
-from repro.ensemble.pipeline import ensemble_detections
 from repro.federation.env import ArmolEnv
 
 
@@ -36,21 +40,33 @@ class FederationService:
         self.deterministic = deterministic
         self.transmission_ms = transmission_ms
 
-    def handle(self, img_idx: int) -> FederationResult:
-        s = self.env.features[img_idx]
-        a, _ = self.agent.select_action(s, deterministic=self.deterministic)
-        sel = np.where(a > 0.5)[0]
-        dets = [self.env.traces.dets[img_idx][i] for i in sel]
-        ens = ensemble_detections(dets, voting=self.env.voting,
-                                  ablation=self.env.ablation) if dets else \
-            Detections.empty()
+    def _account(self, img_idx: int,
+                 action: np.ndarray) -> FederationResult:
+        """Ensemble + cost/latency bookkeeping for one routed request."""
+        sel = np.where(action > 0.5)[0]
+        ens = self.env.core.ensemble(img_idx,
+                                     self.env.core.mask_of(action))
         cost = float(np.sum(self.env.costs[sel]))
         # transmission is sequential over selected providers; inference is
         # parallel -> max latency (paper Sec. II-B)
         lats = [self.env.traces.providers[i].latency_ms for i in sel]
         latency = self.transmission_ms * len(sel) + (max(lats) if lats
                                                      else 0.0)
-        return FederationResult(ens, a, cost, latency)
+        return FederationResult(ens, action, cost, latency)
 
-    def handle_many(self, img_indices) -> List[FederationResult]:
-        return [self.handle(int(i)) for i in img_indices]
+    def handle(self, img_idx: int) -> FederationResult:
+        s = self.env.features[img_idx]
+        a, _ = self.agent.select_action(s, deterministic=self.deterministic)
+        return self._account(img_idx, np.asarray(a))
+
+    def handle_many(self, img_indices: Sequence[int]
+                    ) -> List[FederationResult]:
+        imgs = [int(i) for i in img_indices]
+        if not imgs:
+            return []
+        from repro.core.loops import agent_policy
+        policy = agent_policy(self.agent, deterministic=self.deterministic)
+        actions = policy.select_batch(self.env.features[np.asarray(imgs)])
+        self.env.core.precompute(imgs)
+        return [self._account(img, np.asarray(a))
+                for img, a in zip(imgs, actions)]

@@ -1,7 +1,8 @@
 """Ensemble stage: voting, NMS/Soft-NMS/WBF, pipeline invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.ensemble.ablation import nms, soft_nms, wbf
 from repro.ensemble.boxes import Detections, iou_matrix

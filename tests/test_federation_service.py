@@ -1,0 +1,84 @@
+"""FederationService accounting: cost = sum of selected provider fees,
+latency = transmission_ms * |sel| + max(selected provider latencies)
+(sequential transmission, parallel inference — paper Sec. II-B), and the
+empty-selection path returns Detections.empty().  handle_many must agree
+with per-request handle."""
+import numpy as np
+import pytest
+
+from repro.ensemble.boxes import Detections
+from repro.ensemble.pipeline import ensemble_detections
+from repro.federation.env import ArmolEnv
+from repro.federation.providers import default_providers
+from repro.federation.traces import generate_traces
+from repro.serving.federation_service import FederationService
+
+TR = generate_traces(default_providers(), 40, seed=5)
+N = TR.n_providers
+ENV = ArmolEnv(TR, mode="gt", beta=0.0, seed=0)
+
+
+class FixedAgent:
+    """Always selects the same subset (batched-aware, like the real ones)."""
+
+    def __init__(self, action):
+        self.action = np.asarray(action, np.float32)
+
+    def select_action(self, s, *, deterministic=False):
+        s = np.asarray(s)
+        if s.ndim == 2:
+            return np.tile(self.action, (len(s), 1)), None
+        return self.action.copy(), None
+
+
+@pytest.mark.parametrize("action", [[1, 0, 0], [0, 1, 1], [1, 1, 1]])
+def test_cost_and_latency_accounting(action):
+    svc = FederationService(ENV, FixedAgent(action), transmission_ms=20.0)
+    res = svc.handle(3)
+    sel = np.where(np.asarray(action) > 0.5)[0]
+    fees = sum(TR.providers[i].cost_milli_usd for i in sel)
+    lat = 20.0 * len(sel) + max(TR.providers[i].latency_ms for i in sel)
+    assert res.cost_milli_usd == pytest.approx(fees)
+    assert res.latency_ms == pytest.approx(lat)
+    np.testing.assert_array_equal(res.action, np.asarray(action, np.float32))
+
+
+def test_empty_selection_returns_empty_detections():
+    svc = FederationService(ENV, FixedAgent([0, 0, 0]))
+    res = svc.handle(0)
+    assert len(res.detections) == 0
+    np.testing.assert_array_equal(res.detections.boxes,
+                                  Detections.empty().boxes)
+    assert res.cost_milli_usd == 0.0
+    assert res.latency_ms == 0.0
+
+
+def test_detections_match_direct_ensemble():
+    svc = FederationService(ENV, FixedAgent([1, 0, 1]))
+    res = svc.handle(7)
+    ref = ensemble_detections([TR.dets[7][0], TR.dets[7][2]],
+                              voting=ENV.voting, ablation=ENV.ablation)
+    np.testing.assert_array_equal(res.detections.boxes, ref.boxes)
+    np.testing.assert_array_equal(res.detections.scores, ref.scores)
+    np.testing.assert_array_equal(res.detections.labels, ref.labels)
+
+
+def test_handle_many_matches_handle():
+    svc = FederationService(ENV, FixedAgent([0, 1, 1]))
+    imgs = list(ENV.test_idx[:6])
+    many = svc.handle_many(imgs)
+    assert len(many) == 6
+    for img, got in zip(imgs, many):
+        ref = svc.handle(int(img))
+        np.testing.assert_array_equal(got.action, ref.action)
+        assert got.cost_milli_usd == ref.cost_milli_usd
+        assert got.latency_ms == ref.latency_ms
+        np.testing.assert_array_equal(got.detections.boxes,
+                                      ref.detections.boxes)
+        np.testing.assert_array_equal(got.detections.scores,
+                                      ref.detections.scores)
+
+
+def test_handle_many_empty_input():
+    svc = FederationService(ENV, FixedAgent([1, 1, 1]))
+    assert svc.handle_many([]) == []

@@ -1,0 +1,251 @@
+"""Parity tests: the batched/cached subset-evaluation core must reproduce
+the per-image seed path (fresh ensemble_detections + image_ap50 per
+(image, action) pair) bit for bit — metrics {ap50, map, cost, counts} and
+the raw detection arrays."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.loops import (agent_policy, ensembleN_policy,
+                              enumeration_actions, evaluate_policy,
+                              upper_bound)
+from repro.ensemble.boxes import Detections
+from repro.ensemble.metrics import ap50, coco_map, image_ap50
+from repro.ensemble.pipeline import (ensemble_detections,
+                                     ensemble_detections_batch)
+from repro.federation.env import ArmolEnv
+from repro.federation.evaluation import (SubsetEvaluationCore,
+                                         action_to_mask, mask_to_action,
+                                         popcount_masks)
+from repro.federation.providers import default_providers
+from repro.federation.traces import generate_traces
+
+TR = generate_traces(default_providers(), 60, seed=11)
+N = TR.n_providers
+ACTIONS = enumeration_actions(N)
+
+
+def det_policy(env):
+    """Deterministic state-dependent policy (no RNG, so the batched and
+    per-image call orders see identical actions)."""
+    def f(s):
+        s = np.atleast_2d(s)
+        a = (s[:, :N] > np.median(s[:, :N], axis=1, keepdims=True))
+        a = a.astype(np.float32)
+        a[a.sum(axis=1) == 0, 0] = 1.0
+        out = a if len(a) > 1 else a[0]
+        return out
+    f.select_batch = f
+    return f
+
+
+# ---------------------------------------------------------------------------
+# per-pair parity
+# ---------------------------------------------------------------------------
+
+def test_core_matches_per_image_path_exactly():
+    env = ArmolEnv(TR, mode="gt", beta=0.0, seed=0)
+    for img in range(0, 20):
+        gt = TR.gts[img]
+        for a in ACTIONS:
+            sel = [TR.dets[img][i] for i in range(N) if a[i] > 0.5]
+            d_ref = ensemble_detections(sel)
+            v_ref = image_ap50(d_ref, gt)
+            c_ref = float(np.sum(env.costs * (a > 0.5)))
+            r, v, c = env.evaluate_action(img, a)
+            assert c == c_ref
+            assert v == v_ref
+            assert r == (-1.0 if len(d_ref) == 0 else v_ref)
+            d = env.ensemble_for(img, a)
+            np.testing.assert_array_equal(d.boxes, d_ref.boxes)
+            np.testing.assert_array_equal(d.scores, d_ref.scores)
+            np.testing.assert_array_equal(d.labels, d_ref.labels)
+            np.testing.assert_array_equal(d.providers, d_ref.providers)
+
+
+def test_core_memoizes():
+    core = SubsetEvaluationCore(TR)
+    a = np.ones(N, np.float32)
+    d1 = core.ensemble(3, core.mask_of(a))
+    misses = core.stats["ens_misses"]
+    d2 = core.ensemble(3, core.mask_of(a))
+    assert d1 is d2
+    assert core.stats["ens_misses"] == misses
+    assert core.stats["ens_hits"] >= 1
+
+
+def test_pseudo_gt_matches_full_ensemble():
+    env = ArmolEnv(TR, mode="nogt", beta=0.0, seed=0)
+    img = 5
+    ref = ensemble_detections(TR.dets[img])
+    got = env.pseudo_gt(img)
+    np.testing.assert_array_equal(got.boxes, ref.boxes)
+    np.testing.assert_array_equal(got.scores, ref.scores)
+
+
+def test_nogt_reward_uses_pseudo_reference():
+    env = ArmolEnv(TR, mode="nogt", beta=0.0, seed=0)
+    img = int(env.train_idx[0])
+    a = np.ones(N, np.float32)
+    ens = ensemble_detections(TR.dets[img])
+    v_ref = image_ap50(ens, env.pseudo_gt(img))
+    _, v, _ = env.evaluate_action(img, a)
+    assert v == v_ref
+
+
+# ---------------------------------------------------------------------------
+# evaluate_policy / upper_bound parity vs seed-style loops
+# ---------------------------------------------------------------------------
+
+def seed_evaluate_policy(select_fn, env):
+    """The seed's evaluate_policy, verbatim semantics."""
+    dts, gts = {}, {}
+    counts = np.zeros(env.n_providers, np.int64)
+    total_cost = 0.0
+    for img in env.test_idx:
+        a = np.asarray(select_fn(env.features[img]), np.float32)
+        counts += (a > 0.5).astype(np.int64)
+        total_cost += float(np.sum(env.costs * (a > 0.5)))
+        sel = [env.traces.dets[int(img)][i]
+               for i in range(env.n_providers) if a[i] > 0.5]
+        dts[int(img)] = (ensemble_detections(sel) if sel
+                         else Detections.empty())
+        gts[int(img)] = env.traces.gts[int(img)]
+    n = max(len(env.test_idx), 1)
+    return {"ap50": 100.0 * ap50(dts, gts),
+            "map": 100.0 * coco_map(dts, gts), "cost": total_cost / n,
+            "counts": counts.tolist(), "n_images": n}
+
+
+def seed_upper_bound(env):
+    """The seed's Algo.-2 brute force, verbatim semantics."""
+    n = env.n_providers
+    actions = []
+    for a in itertools.product([0, 1], repeat=n):
+        if any(a):
+            actions.append(np.asarray(a, np.float32))
+    actions.sort(key=lambda a: (a.sum(),))
+    dts, gts = {}, {}
+    counts = np.zeros(n, np.int64)
+    total_cost = 0.0
+    for img in env.test_idx:
+        best_v, best_a, best_d = -1.0, None, None
+        gt = env.traces.gts[int(img)]
+        for a in actions:
+            sel = [env.traces.dets[int(img)][i] for i in range(n)
+                   if a[i] > 0.5]
+            d = ensemble_detections(sel) if sel else Detections.empty()
+            v = image_ap50(d, gt)
+            if v > best_v:
+                best_v, best_a, best_d = v, a, d
+        counts += (best_a > 0.5).astype(np.int64)
+        total_cost += float(np.sum(env.costs * (best_a > 0.5)))
+        dts[int(img)] = best_d
+        gts[int(img)] = gt
+    m = max(len(env.test_idx), 1)
+    return {"ap50": 100.0 * ap50(dts, gts),
+            "map": 100.0 * coco_map(dts, gts), "cost": total_cost / m,
+            "counts": counts.tolist(), "n_images": m}
+
+
+def test_evaluate_policy_bitwise_parity():
+    env = ArmolEnv(TR, mode="gt", beta=0.0, seed=0)
+    pol = det_policy(env)
+    got = evaluate_policy(pol, env)
+    ref = seed_evaluate_policy(pol, env)
+    assert got == ref
+
+
+def test_evaluate_policy_parity_unbatched_policy():
+    env = ArmolEnv(TR, mode="gt", beta=0.0, seed=0)
+    got = evaluate_policy(ensembleN_policy(env), env)
+    ref = seed_evaluate_policy(ensembleN_policy(env), env)
+    assert got == ref
+
+
+def test_upper_bound_bitwise_parity():
+    env = ArmolEnv(TR, mode="gt", beta=0.0, seed=0)
+    assert upper_bound(env) == seed_upper_bound(env)
+
+
+# ---------------------------------------------------------------------------
+# batched env APIs
+# ---------------------------------------------------------------------------
+
+def test_evaluate_actions_matches_scalar():
+    env = ArmolEnv(TR, mode="gt", beta=-0.1, seed=0)
+    rng = np.random.default_rng(0)
+    imgs = rng.integers(0, len(TR), 16)
+    acts = np.stack([ACTIONS[i % len(ACTIONS)] for i in range(16)])
+    out = env.evaluate_actions(imgs, acts)
+    for t in range(16):
+        r, v, c = env.evaluate_action(int(imgs[t]), acts[t])
+        assert out["reward"][t] == r
+        assert out["ap50"][t] == v
+        assert out["cost"][t] == c
+
+
+def test_step_batch_matches_step():
+    env_a = ArmolEnv(TR, mode="gt", beta=0.0, seed=4)
+    env_b = ArmolEnv(TR, mode="gt", beta=0.0, seed=4)
+    env_a.reset(split="train", shuffle=False)
+    env_b.reset(split="train", shuffle=False)
+    acts = np.stack([ACTIONS[i % len(ACTIONS)] for i in range(10)])
+    nxt, rew, done, infos = env_a.step_batch(acts)
+    for t in range(10):
+        n_ref, r_ref, d_ref, i_ref = env_b.step(acts[t])
+        assert rew[t] == r_ref and done[t] == d_ref
+        assert infos["image"][t] == i_ref["image"]
+        np.testing.assert_array_equal(nxt[t], n_ref)
+    assert env_a._t == env_b._t
+
+
+def test_step_batch_clips_at_episode_end():
+    env = ArmolEnv(TR, mode="gt", beta=0.0, seed=0)
+    env.reset(split="test", shuffle=False)
+    B = len(env.test_idx)
+    acts = np.ones((B + 7, N), np.float32)
+    _, rew, done, _ = env.step_batch(acts)
+    assert len(rew) == B
+    assert done[-1] and not done[:-1].any()
+
+
+# ---------------------------------------------------------------------------
+# batch ensemble pipeline + mask helpers
+# ---------------------------------------------------------------------------
+
+def test_ensemble_detections_batch_matches_single():
+    per_image = [TR.dets[i] for i in range(8)] + [[]]
+    batch = ensemble_detections_batch(per_image)
+    for sel, got in zip(per_image, batch):
+        ref = (ensemble_detections(sel) if sel else Detections.empty())
+        np.testing.assert_array_equal(got.boxes, ref.boxes)
+        np.testing.assert_array_equal(got.scores, ref.scores)
+        np.testing.assert_array_equal(got.labels, ref.labels)
+
+
+def test_mask_roundtrip_and_popcount_order():
+    for a in ACTIONS:
+        m = action_to_mask(a)
+        np.testing.assert_array_equal(mask_to_action(m, N), a)
+    masks = popcount_masks(N)
+    assert masks == [action_to_mask(a) for a in ACTIONS]
+    pops = [bin(m).count("1") for m in masks]
+    assert pops == sorted(pops)
+
+
+def test_agent_policy_batched_matches_single():
+    class StubAgent:
+        def select_action(self, s, *, deterministic=False):
+            s = np.asarray(s)
+            a = (s[..., :N] > 0).astype(np.float32)
+            flat = a.reshape(-1, N)
+            flat[flat.sum(axis=1) == 0, 0] = 1.0
+            return flat.reshape(a.shape), None
+
+    env = ArmolEnv(TR, mode="gt", beta=0.0, seed=0)
+    pol = agent_policy(StubAgent())
+    batch = pol.select_batch(env.features[env.test_idx])
+    single = np.stack([pol(env.features[i]) for i in env.test_idx])
+    np.testing.assert_array_equal(batch, single)

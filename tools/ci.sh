@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a smoke benchmark of the subset-evaluation
+# core (the hot path this repo is built around).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== subset-cache smoke benchmark (50 images) =="
+REPRO_BENCH_IMAGES=50 python benchmarks/run.py subset_cache
+
+echo "CI OK"
