@@ -25,9 +25,10 @@ def main():
 
     agent = SAC(SACConfig(state_dim=env.state_dim,
                           n_providers=env.n_providers, alpha=0.02))
-    print("  training SAC (3 epochs x 300 steps)...")
-    hist = run_off_policy(agent, env, epochs=3, steps_per_epoch=300,
-                          batch_size=128, start_steps=200, update_after=200,
+    print("  training SAC (3 epochs x 300 steps, 8 lanes)...")
+    hist = run_off_policy(agent, env, lanes=8, epochs=3,
+                          steps_per_epoch=300, batch_size=128,
+                          start_steps=200, update_after=200,
                           update_every=50, update_iters=25, log=None)
     last = hist[-1]
     print(f"  {'Armol (SAC)':12s} AP50={last['ap50']:5.2f} "

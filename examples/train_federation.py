@@ -5,8 +5,13 @@ SAC/TD3/PPO training with the combinatorial action mapping, per-epoch test
 episodes, and a final comparison against Random-1/N, Ensemble-N, and the
 brute-force Upper Bound.
 
+Experience collection runs on the multi-lane batched drivers
+(``--lanes`` parallel env lanes, fused lax.scan update blocks);
+``--lanes 1`` reproduces the sequential reference bit-for-bit.
+
   PYTHONPATH=src python examples/train_federation.py --algo sac \
-      --epochs 10 --steps 1000 --images 1000 --mode gt --beta -0.03
+      --epochs 10 --steps 1000 --images 1000 --mode gt --beta -0.03 \
+      --lanes 8
 """
 import argparse
 import json
@@ -32,6 +37,9 @@ def main():
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--steps", type=int, default=1000)
     ap.add_argument("--images", type=int, default=1000)
+    ap.add_argument("--lanes", type=int, default=8,
+                    help="parallel env lanes for the batched drivers "
+                         "(1 = bit-identical to the sequential reference)")
     ap.add_argument("--ten-providers", action="store_true")
     ap.add_argument("--with-baselines", action="store_true")
     ap.add_argument("--out", default="")
@@ -48,17 +56,19 @@ def main():
         agent = SAC(SACConfig(state_dim=env.state_dim,
                               n_providers=env.n_providers,
                               alpha=args.alpha))
-        hist = run_off_policy(agent, env, epochs=args.epochs,
+        hist = run_off_policy(agent, env, lanes=args.lanes,
+                              epochs=args.epochs,
                               steps_per_epoch=args.steps)
     elif args.algo == "td3":
         agent = TD3(TD3Config(state_dim=env.state_dim,
                               n_providers=env.n_providers))
-        hist = run_off_policy(agent, env, epochs=args.epochs,
+        hist = run_off_policy(agent, env, lanes=args.lanes,
+                              epochs=args.epochs,
                               steps_per_epoch=args.steps)
     else:
         agent = PPO(PPOConfig(state_dim=env.state_dim,
                               n_providers=env.n_providers))
-        hist = run_ppo(agent, env, epochs=args.epochs,
+        hist = run_ppo(agent, env, lanes=args.lanes, epochs=args.epochs,
                        steps_per_epoch=args.steps)
 
     results = {"armol": hist[-1], "history": hist}

@@ -1,0 +1,24 @@
+"""Shared fused-update machinery for the RL agents.
+
+``scan_update_block(update_fn)`` lifts a per-step jitted update
+``(cfg, state, batch) -> (state, metrics)`` into a jitted ``lax.scan``
+over stacked (K, B, ...) batches with donated agent state, so a block of
+K gradient steps costs one host->device round trip.  On CPU the scanned
+body is bit-identical to K eager ``update_fn`` calls (asserted by the
+parity suite), so drivers may mix the two freely.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+
+def scan_update_block(update_fn):
+    @partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _block(cfg, state, batches):
+        def body(st, b):
+            st2, metrics = update_fn(cfg, st, b)
+            return st2, metrics
+        return jax.lax.scan(body, state, batches)
+    return _block

@@ -13,6 +13,25 @@ are batch-polymorphic) and reuses cached (image, subset) ensembles across
 epochs; ``upper_bound`` enumerates subsets in popcount order through the
 cache, paying for each image's IoU table exactly once instead of once per
 candidate subset.
+
+Training comes in two flavours per algorithm family:
+
+  * ``run_offpolicy_sequential`` / ``run_ppo_sequential`` — the seed's
+    scalar drivers, kept frozen as the parity reference: one ``env.step``
+    per transition, one ``buf.add`` per transition, one jitted
+    ``agent.update`` dispatch per gradient step.
+  * ``run_off_policy`` / ``run_ppo`` — multi-lane drivers: L parallel
+    episode lanes stepped through ``ArmolEnv.step_lanes`` (one batched
+    agent forward + one batched subset evaluation per tick), transitions
+    written with ``ReplayBuffer.add_batch``, and gradient steps fused into
+    jitted ``lax.scan`` blocks fed by a pre-sampled index matrix
+    (``sample_block``), so the host touches the device once per block.
+
+At ``lanes=1`` the multi-lane drivers consume every rng stream (env
+shuffles, exploration draws, buffer sampling, agent keys) in exactly the
+sequential order and keep the sequential array shapes on the act path, so
+their transition streams and evaluation histories are bit-identical to
+the reference drivers — ``tests/test_train_drivers.py`` asserts this.
 """
 from __future__ import annotations
 
@@ -33,31 +52,54 @@ from repro.federation.evaluation import mask_to_action, popcount_masks
 # Evaluation (one "test episode" = the whole test split)
 # ---------------------------------------------------------------------------
 
+def _make_batch_select(agent, *, deterministic: bool):
+    """(T, D) states -> (T, N) actions in one forward when possible.
+
+    Prefers a dedicated ``select_action_batch`` (PPO's scalar-logp
+    ``select_action`` can't batch); otherwise probes whether the plain
+    action head is batch-polymorphic — at most once, since a failed probe
+    wastes a forward AND consumes an agent rng key — and falls back to
+    row-wise calls (e.g. Wolpertinger re-ranking)."""
+    batch_fn = getattr(agent, "select_action_batch", None)
+    batched = None
+
+    def select(states: np.ndarray) -> np.ndarray:
+        nonlocal batched
+        if batch_fn is not None:
+            return np.asarray(
+                batch_fn(states, deterministic=deterministic)[0],
+                np.float32)
+        if batched is None or batched:
+            try:
+                a = np.asarray(
+                    agent.select_action(
+                        states, deterministic=deterministic)[0], np.float32)
+                if a.ndim == 2 and a.shape[0] == len(states):
+                    batched = True
+                    return a
+            except (TypeError, ValueError):
+                pass
+            batched = False
+        return np.stack([
+            np.asarray(agent.select_action(
+                s, deterministic=deterministic)[0], np.float32)
+            for s in states])
+    return select
+
+
 def agent_policy(agent, *, deterministic: bool = True
                  ) -> Callable[[np.ndarray], np.ndarray]:
     """Wrap an agent as a state->action policy with a batched fast path.
 
     The returned callable maps one state to one binary action (the seed
-    contract); its ``select_batch`` attribute maps a (T, D) state matrix to
-    (T, N) actions in a single jitted forward pass.  Falls back to row-wise
-    calls when the agent's action head is not batch-polymorphic (e.g.
-    Wolpertinger re-ranking)."""
+    contract); its ``select_batch`` attribute maps a (T, D) state matrix
+    to (T, N) actions in a single jitted forward pass, with a row-wise
+    fallback for non-batch-polymorphic action heads."""
     def single(s: np.ndarray) -> np.ndarray:
         return agent.select_action(s, deterministic=deterministic)[0]
 
-    def select_batch(states: np.ndarray) -> np.ndarray:
-        try:
-            a = np.asarray(
-                agent.select_action(states, deterministic=deterministic)[0])
-            if a.ndim == 2 and a.shape[0] == len(states):
-                return a
-        except (TypeError, ValueError):
-            # non-batch-polymorphic action head (e.g. PPO's scalar logp,
-            # Wolpertinger re-ranking); anything else should propagate
-            pass
-        return np.stack([single(s) for s in states])
-
-    single.select_batch = select_batch
+    single.select_batch = _make_batch_select(agent,
+                                             deterministic=deterministic)
     return single
 
 
@@ -94,18 +136,25 @@ def evaluate_policy(select_fn: Callable[[np.ndarray], np.ndarray],
 
 
 # ---------------------------------------------------------------------------
-# Off-policy driver (SAC / TD3)
+# Off-policy drivers (SAC / TD3)
 # ---------------------------------------------------------------------------
 
-def run_off_policy(agent, env: ArmolEnv, *, epochs: int = 5,
-                   steps_per_epoch: int = 500, batch_size: int = 256,
-                   start_steps: int = 200, update_after: int = 300,
-                   update_every: int = 50, update_iters: int = 50,
-                   buffer_capacity: int = 100_000, seed: int = 0,
-                   log: Optional[Callable[[str], None]] = print) -> List[Dict]:
+def run_offpolicy_sequential(agent, env: ArmolEnv, *, epochs: int = 5,
+                             steps_per_epoch: int = 500,
+                             batch_size: int = 256,
+                             start_steps: int = 200, update_after: int = 300,
+                             update_every: int = 50, update_iters: int = 50,
+                             buffer_capacity: int = 100_000, seed: int = 0,
+                             log: Optional[Callable[[str], None]] = print,
+                             buffer: Optional[ReplayBuffer] = None
+                             ) -> List[Dict]:
+    """The seed's scalar off-policy driver — FROZEN as the parity
+    reference for ``run_off_policy``: one env step, one buffer add, and
+    one jitted update dispatch per transition/gradient step."""
     rng = np.random.default_rng(seed)
-    buf = ReplayBuffer(buffer_capacity, env.state_dim, env.n_providers,
-                       seed=seed)
+    buf = buffer if buffer is not None else \
+        ReplayBuffer(buffer_capacity, env.state_dim, env.n_providers,
+                     seed=seed)
     history = []
     s = env.reset(split="train")
     total = 0
@@ -136,13 +185,90 @@ def run_off_policy(agent, env: ArmolEnv, *, epochs: int = 5,
     return history
 
 
+def run_off_policy(agent, env: ArmolEnv, *, lanes: int = 1, epochs: int = 5,
+                   steps_per_epoch: int = 500, batch_size: int = 256,
+                   start_steps: int = 200, update_after: int = 300,
+                   update_every: int = 50, update_iters: int = 50,
+                   buffer_capacity: int = 100_000, seed: int = 0,
+                   log: Optional[Callable[[str], None]] = print,
+                   buffer: Optional[ReplayBuffer] = None) -> List[Dict]:
+    """Multi-lane off-policy driver.
+
+    ``lanes`` parallel episode cursors advance through
+    ``ArmolEnv.step_lanes`` (one batched agent forward + one batched
+    subset evaluation per tick), transitions land in the buffer via one
+    ``add_batch`` write, and each ``update_iters`` block of gradient
+    steps runs as a single jitted ``lax.scan`` (``agent.update_block``)
+    over a pre-sampled index matrix.  ``steps_per_epoch`` counts
+    transitions (rounded up to whole ticks), so the trained workload
+    matches the sequential driver at any lane count.  With ``lanes=1``
+    the transition stream and history are bit-identical to
+    ``run_offpolicy_sequential``.
+    """
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
+    rng = np.random.default_rng(seed)
+    buf = buffer if buffer is not None else \
+        ReplayBuffer(buffer_capacity, env.state_dim, env.n_providers,
+                     seed=seed)
+    update_block = getattr(agent, "update_block", None)
+    select_many = _make_batch_select(agent, deterministic=False)
+    n = env.n_providers
+    history = []
+    states = env.reset_lanes(lanes, split="train")
+    total = 0
+    for epoch in range(epochs):
+        t0 = time.time()
+        for _ in range(-(-steps_per_epoch // lanes)):
+            explore = (total + np.arange(lanes)) < start_steps
+            acts = np.zeros((lanes, n), np.float32)
+            for lane in np.flatnonzero(explore):
+                a = rng.integers(0, 2, n).astype(np.float32)
+                if a.sum() == 0:
+                    a[rng.integers(n)] = 1.0
+                acts[lane] = a
+            on_policy = np.flatnonzero(~explore)
+            if len(on_policy) == lanes == 1:
+                # keep the sequential (D,) act shape: matvec and matmul
+                # round differently, and L=1 parity is bitwise
+                acts[0] = np.asarray(agent.select_action(states[0])[0],
+                                     np.float32)
+            elif len(on_policy):
+                acts[on_policy] = select_many(states[on_policy])
+            nxt, r, dones, infos, carry = env.step_lanes(acts)
+            buf.add_batch(states, acts, r, nxt, dones.astype(np.float32))
+            states = carry
+            prev, total = total, total + lanes
+            for k in range(prev // update_every + 1,
+                           total // update_every + 1):
+                if k * update_every < update_after:
+                    continue
+                if update_block is not None:
+                    update_block(buf.sample_block(update_iters, batch_size))
+                else:
+                    for _ in range(update_iters):
+                        agent.update(buf.sample(batch_size))
+        res = evaluate_policy(agent_policy(agent), env)
+        res.update({"epoch": epoch, "steps": total,
+                    "wall_s": round(time.time() - t0, 1)})
+        history.append(res)
+        if log:
+            log(f"[{type(agent).__name__}x{lanes}] epoch {epoch}: "
+                f"AP50={res['ap50']:.2f} mAP={res['map']:.2f} "
+                f"cost={res['cost']:.3f} counts={res['counts']}")
+    return history
+
+
 # ---------------------------------------------------------------------------
-# On-policy driver (PPO)
+# On-policy drivers (PPO)
 # ---------------------------------------------------------------------------
 
-def run_ppo(agent: PPO, env: ArmolEnv, *, epochs: int = 5,
-            steps_per_epoch: int = 500, seed: int = 0,
-            log: Optional[Callable[[str], None]] = print) -> List[Dict]:
+def run_ppo_sequential(agent: PPO, env: ArmolEnv, *, epochs: int = 5,
+                       steps_per_epoch: int = 500, seed: int = 0,
+                       log: Optional[Callable[[str], None]] = print
+                       ) -> List[Dict]:
+    """The seed's scalar PPO driver — FROZEN as the parity reference for
+    ``run_ppo``."""
     history = []
     s = env.reset(split="train")
     for epoch in range(epochs):
@@ -172,6 +298,67 @@ def run_ppo(agent: PPO, env: ArmolEnv, *, epochs: int = 5,
         history.append(res)
         if log:
             log(f"[PPO] epoch {epoch}: AP50={res['ap50']:.2f} "
+                f"cost={res['cost']:.3f}")
+    return history
+
+
+def run_ppo(agent: PPO, env: ArmolEnv, *, lanes: int = 1, epochs: int = 5,
+            steps_per_epoch: int = 500,
+            log: Optional[Callable[[str], None]] = print) -> List[Dict]:
+    """Multi-lane PPO driver: L lanes collected tick-by-tick through one
+    batched act + one batched env evaluation, per-lane GAE against each
+    lane's own done flags, and the whole rollout fused into one scanned
+    update (``PPO.update_from_rollout``).  Rollout rows are flattened
+    time-major, so ``lanes=1`` reproduces ``run_ppo_sequential``
+    bit-for-bit.  Reproducibility is governed by the env and agent seeds
+    (the driver itself draws no randomness)."""
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
+    n = env.n_providers
+    history = []
+    states = env.reset_lanes(lanes, split="train")
+    for epoch in range(epochs):
+        t0 = time.time()
+        ticks = -(-steps_per_epoch // lanes)
+        S = np.zeros((ticks, lanes, env.state_dim), np.float32)
+        P = np.zeros((ticks, lanes, n), np.float32)
+        LP = np.zeros((ticks, lanes), np.float32)
+        R = np.zeros((ticks, lanes), np.float32)
+        D = np.zeros((ticks, lanes), np.float32)
+        V = np.zeros((ticks, lanes), np.float32)
+        for t in range(ticks):
+            S[t] = states
+            if lanes == 1:
+                a, P[t, 0], LP[t, 0], V[t, 0] = agent.select_action(
+                    states[0])
+                acts = a[None]
+            else:
+                acts, P[t], LP[t], V[t] = agent.select_action_batch(states)
+            nxt, r, dones, infos, carry = env.step_lanes(acts)
+            R[t] = r
+            D[t] = dones
+            states = carry
+        if lanes == 1:
+            last_v = np.asarray([agent.select_action(states[0])[3]],
+                                np.float32)
+        else:
+            last_v = np.asarray(agent.select_action_batch(states)[3],
+                                np.float32)
+        adv = np.zeros((ticks, lanes), np.float32)
+        ret = np.zeros((ticks, lanes), np.float32)
+        for lane in range(lanes):
+            adv[:, lane], ret[:, lane] = agent.gae(
+                R[:, lane], V[:, lane], D[:, lane], float(last_v[lane]))
+        rollout = {"s": S.reshape(ticks * lanes, -1),
+                   "proto": P.reshape(ticks * lanes, -1),
+                   "logp": LP.reshape(-1),
+                   "adv": adv.reshape(-1), "ret": ret.reshape(-1)}
+        agent.update_from_rollout(rollout)
+        res = evaluate_policy(agent_policy(agent), env)
+        res.update({"epoch": epoch, "wall_s": round(time.time() - t0, 1)})
+        history.append(res)
+        if log:
+            log(f"[PPOx{lanes}] epoch {epoch}: AP50={res['ap50']:.2f} "
                 f"cost={res['cost']:.3f}")
     return history
 

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core import networks as nets
 from repro.core.action_space import threshold_map
+from repro.core.blocks import scan_update_block
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 
 
@@ -62,28 +63,45 @@ def _logp(actor, s, proto):
 
 @partial(jax.jit, static_argnums=0)
 def _minibatch_update(cfg: PPOConfig, state: PPOState, mb):
+    """One clipped-surrogate step.  ``mb`` may carry a 0/1 row-weight
+    vector ``w`` (uniform-shape padding for the scanned update block);
+    with all-ones weights every weighted mean reduces to the plain mean,
+    so the masked path is numerically the seed path."""
     s, proto, logp_old, adv, ret = mb["s"], mb["proto"], mb["logp"], \
         mb["adv"], mb["ret"]
-    adv = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+    w = mb["w"] if "w" in mb else jnp.ones_like(adv)
+    wsum = jnp.sum(w)
+
+    def wmean(x):
+        return jnp.sum(x * w) / wsum
+    mu_adv = wmean(adv)
+    std_adv = jnp.sqrt(wmean((adv - mu_adv) ** 2))
+    adv = (adv - mu_adv) / (std_adv + 1e-8)
 
     def pi_loss(ap):
         logp = _logp(ap, s, proto)
         ratio = jnp.exp(logp - logp_old)
         clipped = jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip)
-        ent = -jnp.mean(logp)
-        return -jnp.mean(jnp.minimum(ratio * adv, clipped * adv)) \
+        ent = -wmean(logp)
+        return -wmean(jnp.minimum(ratio * adv, clipped * adv)) \
             - cfg.entropy_coef * ent
     pl, pg = jax.value_and_grad(pi_loss)(state.actor)
     actor, opt_actor = adamw_update(state.actor, pg, state.opt_actor,
                                     lr=cfg.lr)
 
     def v_loss(cp):
-        return jnp.mean((nets.v_value(cp, s) - ret) ** 2)
+        return wmean((nets.v_value(cp, s) - ret) ** 2)
     vl, vg = jax.value_and_grad(v_loss)(state.critic)
     critic, opt_critic = adamw_update(state.critic, vg, state.opt_critic,
                                       lr=cfg.lr)
     return PPOState(actor, critic, opt_actor, opt_critic, state.key), \
         {"pi_loss": pl, "v_loss": vl}
+
+
+# all minibatch steps of one rollout update fused in a lax.scan over
+# stacked (K, mb, ...) arrays — one host->device transfer per rollout
+# instead of one per minibatch; see repro.core.blocks
+_update_rollout_block = scan_update_block(_minibatch_update)
 
 
 @partial(jax.jit, static_argnums=0)
@@ -106,6 +124,15 @@ class PPO:
                                              jnp.asarray(s), deterministic)
         return np.asarray(a), np.asarray(proto), float(logp), float(v)
 
+    def select_action_batch(self, s: np.ndarray, *, deterministic=False):
+        """Batched act for the multi-lane driver: (L, D) states -> arrays
+        (a (L, N), proto (L, N), logp (L,), v (L,)); one key split per
+        call, like the scalar path."""
+        a, proto, logp, v, self.state = _act(self.cfg, self.state,
+                                             jnp.asarray(s), deterministic)
+        return (np.asarray(a), np.asarray(proto), np.asarray(logp),
+                np.asarray(v))
+
     def gae(self, rewards, values, dones, last_value):
         cfg = self.cfg
         T = len(rewards)
@@ -121,15 +148,46 @@ class PPO:
         ret = adv + np.asarray(values, np.float32)
         return adv, ret
 
-    def update_from_rollout(self, rollout: Dict[str, np.ndarray]):
+    def _minibatch_plan(self, n: int):
+        """Host-side (K, mb) index matrix + 0/1 weights covering
+        ``update_epochs`` shuffled passes; the short trailing slice of
+        each pass is padded (weight 0) to keep shapes scan-uniform."""
         cfg = self.cfg
-        n = len(rollout["s"])
+        mb = min(cfg.minibatch, n)
         rng = np.random.default_rng(0)
-        metrics = {}
+        idx_rows, w_rows = [], []
         for _ in range(cfg.update_epochs):
             perm = rng.permutation(n)
-            for i in range(0, n, cfg.minibatch):
-                idx = perm[i:i + cfg.minibatch]
-                mb = {k: jnp.asarray(v[idx]) for k, v in rollout.items()}
-                self.state, metrics = _minibatch_update(cfg, self.state, mb)
+            for i in range(0, n, mb):
+                sl = perm[i:i + mb]
+                w = np.ones(mb, np.float32)
+                if len(sl) < mb:
+                    w[len(sl):] = 0.0
+                    sl = np.concatenate(
+                        [sl, np.zeros(mb - len(sl), sl.dtype)])
+                idx_rows.append(sl)
+                w_rows.append(w)
+        return np.stack(idx_rows), np.stack(w_rows)
+
+    def update_from_rollout(self, rollout: Dict[str, np.ndarray]):
+        idx, w = self._minibatch_plan(len(rollout["s"]))
+        mbs = {k: jnp.asarray(np.asarray(v)[idx])
+               for k, v in rollout.items()}
+        mbs["w"] = jnp.asarray(w)
+        self.state, metrics = _update_rollout_block(self.cfg, self.state,
+                                                    mbs)
+        return {k: float(np.asarray(v)[-1]) for k, v in metrics.items()}
+
+    def update_minibatch(self, mb: Dict[str, np.ndarray]):
+        """One eager minibatch step (reference path for the scan-parity
+        regression tests)."""
+        jb = {k: jnp.asarray(v) for k, v in mb.items()}
+        self.state, metrics = _minibatch_update(self.cfg, self.state, jb)
         return {k: float(v) for k, v in metrics.items()}
+
+    def update_minibatches(self, mbs: Dict[str, np.ndarray]):
+        """Fused scan over pre-stacked (K, mb, ...) minibatches."""
+        jb = {k: jnp.asarray(v) for k, v in mbs.items()}
+        self.state, metrics = _update_rollout_block(self.cfg, self.state,
+                                                    jb)
+        return {k: float(np.asarray(v)[-1]) for k, v in metrics.items()}

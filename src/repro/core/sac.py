@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import networks as nets
 from repro.core.action_space import threshold_map
+from repro.core.blocks import scan_update_block
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 
 
@@ -105,6 +106,10 @@ def _update(cfg: SACConfig, state: SACState, batch) -> tuple:
     return new, metrics
 
 
+# fused block of K gradient steps; see repro.core.blocks
+_update_block = scan_update_block(_update)
+
+
 @partial(jax.jit, static_argnums=0)
 def _act(cfg: SACConfig, state: SACState, s, deterministic: bool):
     key, sub = jax.random.split(state.key)
@@ -138,3 +143,11 @@ class SAC:
         jb = {k: jnp.asarray(v) for k, v in batch.items()}
         self.state, metrics = _update(self.cfg, self.state, jb)
         return {k: float(v) for k, v in metrics.items()}
+
+    def update_block(self, batches: Dict[str, np.ndarray]) -> Dict[str, float]:
+        """K fused gradient steps from pre-sampled (K, B, ...) batches
+        (``ReplayBuffer.sample_block``); returns the last step's metrics,
+        matching what an eager K-iteration loop would report."""
+        jb = {k: jnp.asarray(v) for k, v in batches.items()}
+        self.state, metrics = _update_block(self.cfg, self.state, jb)
+        return {k: float(np.asarray(v)[-1]) for k, v in metrics.items()}

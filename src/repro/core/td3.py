@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core import networks as nets
 from repro.core.action_space import threshold_map
+from repro.core.blocks import scan_update_block
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 
 
@@ -104,6 +105,11 @@ def _update(cfg: TD3Config, state: TD3State, batch):
     return new, {"q1_loss": l1, "q2_loss": l2, "pi_loss": pl}
 
 
+# fused block of K gradient steps (the delayed-policy counter rides
+# along in the scanned carry); see repro.core.blocks
+_update_block = scan_update_block(_update)
+
+
 @partial(jax.jit, static_argnums=0)
 def _act(cfg: TD3Config, state: TD3State, s, deterministic: bool):
     key, kn = jax.random.split(state.key)
@@ -128,3 +134,9 @@ class TD3:
         jb = {k: jnp.asarray(v) for k, v in batch.items()}
         self.state, metrics = _update(self.cfg, self.state, jb)
         return {k: float(v) for k, v in metrics.items()}
+
+    def update_block(self, batches: Dict[str, np.ndarray]) -> Dict[str, float]:
+        """K fused gradient steps from pre-sampled (K, B, ...) batches."""
+        jb = {k: jnp.asarray(v) for k, v in batches.items()}
+        self.state, metrics = _update_block(self.cfg, self.state, jb)
+        return {k: float(np.asarray(v)[-1]) for k, v in metrics.items()}

@@ -69,6 +69,9 @@ class ArmolEnv:
 
         self._order: np.ndarray = self.train_idx
         self._t = 0
+        self._lane_orders: list = []
+        self._lane_t = np.zeros(0, np.int64)
+        self._lane_split = ("train", True)
 
     @property
     def _against(self) -> str:
@@ -121,6 +124,61 @@ class ArmolEnv:
         done = self._t >= len(self._order)
         nxt = self.features[self._order[min(self._t, len(self._order) - 1)]]
         return nxt, reward, done, {"ap50": v, "cost": cost, "image": img}
+
+    # ------------------------------------------------------------------
+    # Parallel lanes: L independent episode cursors over the same trace
+    # split, evaluated through one batched subset-evaluation call per tick.
+    # Lane 0 with L=1 consumes self.rng identically to reset()/step(), so
+    # the multi-lane training drivers are bit-compatible with the
+    # sequential reference at L=1.
+    # ------------------------------------------------------------------
+    def reset_lanes(self, n_lanes: int = 1, *, split: str = "train",
+                    shuffle: bool = True) -> np.ndarray:
+        idx = self.train_idx if split == "train" else self.test_idx
+        self._lane_split = (split, shuffle)
+        self._lane_orders = [
+            self.rng.permutation(idx) if shuffle else idx.copy()
+            for _ in range(n_lanes)]
+        self._lane_t = np.zeros(n_lanes, np.int64)
+        return self.features[[int(o[0]) for o in self._lane_orders]]
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self._lane_orders)
+
+    def lane_states(self) -> np.ndarray:
+        return self.features[
+            [int(o[t]) for o, t in zip(self._lane_orders, self._lane_t)]]
+
+    def step_lanes(self, actions: np.ndarray):
+        """Advance every lane one step with one batched evaluation.
+
+        Returns (nxt, rewards, dones, infos, carry): ``nxt`` (L, D) follows
+        ``step``'s next-state convention (episode-end clamps to the last
+        image — what the replay buffer stores), while ``carry`` (L, D) is
+        the state to act on next tick (finished lanes auto-reset onto a
+        fresh permutation, drawn from self.rng in lane order).
+        """
+        L = len(self._lane_orders)
+        actions = np.asarray(actions, np.float32).reshape(L,
+                                                          self.n_providers)
+        imgs = np.asarray([int(o[t]) for o, t in
+                           zip(self._lane_orders, self._lane_t)], np.int64)
+        out = self.evaluate_actions(imgs, actions)
+        self._lane_t += 1
+        lens = np.asarray([len(o) for o in self._lane_orders])
+        dones = self._lane_t >= lens
+        nxt_pos = np.minimum(self._lane_t, lens - 1)
+        nxt = self.features[
+            [int(o[p]) for o, p in zip(self._lane_orders, nxt_pos)]]
+        split, shuffle = self._lane_split
+        idx = self.train_idx if split == "train" else self.test_idx
+        for lane in np.flatnonzero(dones):
+            self._lane_orders[lane] = (self.rng.permutation(idx) if shuffle
+                                       else idx.copy())
+            self._lane_t[lane] = 0
+        infos = {"ap50": out["ap50"], "cost": out["cost"], "image": imgs}
+        return nxt, out["reward"], dones, infos, self.lane_states()
 
     def step_batch(self, actions: np.ndarray):
         """Consume the next B steps of the episode in one vectorized call.

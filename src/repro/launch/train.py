@@ -1,11 +1,20 @@
-"""Provider-side LM training driver.
+"""Training drivers behind one launch entry point.
 
-Runs a real (reduced or full) architecture with the synthetic data pipeline
-on whatever devices exist.  On the CPU container use ``--reduced`` (the
-full configs are exercised via launch.dryrun instead).
+Provider-side LM training: runs a real (reduced or full) architecture with
+the synthetic data pipeline on whatever devices exist.  On the CPU
+container use ``--reduced`` (the full configs are exercised via
+launch.dryrun instead).
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
       --reduced --steps 50 --batch 8 --seq 128
+
+Federation-side selector training: ``--federation`` trains the Armol
+provider-selection agent through the multi-lane batched drivers
+(``--lanes`` parallel env lanes, fused lax.scan update blocks; ``--lanes
+1`` is bit-identical to the sequential reference).
+
+  PYTHONPATH=src python -m repro.launch.train --federation --algo sac \
+      --epochs 5 --steps 500 --images 400 --lanes 8
 """
 from __future__ import annotations
 
@@ -22,18 +31,80 @@ from repro.models.model import build_model
 from repro.training.train_step import init_train_state, make_train_step
 
 
+def run_federation(args) -> int:
+    from repro.core.loops import run_off_policy, run_ppo
+    from repro.core.ppo import PPO, PPOConfig
+    from repro.core.sac import SAC, SACConfig
+    from repro.core.td3 import TD3, TD3Config
+    from repro.federation.env import ArmolEnv
+    from repro.federation.providers import default_providers
+    from repro.federation.traces import generate_traces
+
+    traces = generate_traces(default_providers(), args.images,
+                             seed=args.seed)
+    env = ArmolEnv(traces, mode=args.mode, beta=args.beta,
+                   seed=args.seed + 1)
+    print(f"[train] federation selector: {env.n_providers} providers, "
+          f"{args.images} images, algo={args.algo}, lanes={args.lanes}")
+    t0 = time.time()
+    if args.algo == "ppo":
+        agent = PPO(PPOConfig(state_dim=env.state_dim,
+                              n_providers=env.n_providers,
+                              seed=args.seed))
+        hist = run_ppo(agent, env, lanes=args.lanes, epochs=args.epochs,
+                       steps_per_epoch=args.steps)
+        total = args.epochs * (-(-args.steps // args.lanes)) * args.lanes
+    else:
+        cls, cfg_cls = (TD3, TD3Config) if args.algo == "td3" \
+            else (SAC, SACConfig)
+        agent = cls(cfg_cls(state_dim=env.state_dim,
+                            n_providers=env.n_providers, seed=args.seed))
+        hist = run_off_policy(agent, env, lanes=args.lanes,
+                              epochs=args.epochs,
+                              steps_per_epoch=args.steps, seed=args.seed)
+        total = hist[-1]["steps"]
+    dt = time.time() - t0
+    last = hist[-1]
+    print(f"[train] done: AP50={last['ap50']:.2f} cost={last['cost']:.3f} "
+          f"({total / max(dt, 1e-9):.0f} env steps/s over {total} steps)")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="",
+                    help="LM architecture (required unless --federation)")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="LM: training steps (default 50); federation: "
+                         "env steps per epoch (default 500)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--federation", action="store_true",
+                    help="train the Armol provider-selection agent on the "
+                         "batched multi-lane drivers")
+    ap.add_argument("--algo", choices=["sac", "td3", "ppo"], default="sac")
+    ap.add_argument("--mode", choices=["gt", "nogt"], default="gt")
+    ap.add_argument("--beta", type=float, default=-0.03)
+    ap.add_argument("--lanes", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=5)
+    ap.add_argument("--images", type=int, default=400)
     args = ap.parse_args()
+
+    if args.federation:
+        # the shared --steps flag means env steps per epoch here; the LM
+        # default of 50 would end training before the first update block
+        if args.steps is None:
+            args.steps = 500
+        return run_federation(args)
+    if args.steps is None:
+        args.steps = 50
+    if not args.arch:
+        ap.error("--arch is required unless --federation is given")
 
     cfg = get_arch(args.arch)
     if args.reduced:

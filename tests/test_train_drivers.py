@@ -1,0 +1,248 @@
+"""Batched-vs-sequential training-driver parity suite.
+
+The multi-lane drivers (``run_off_policy`` / ``run_ppo``) must reproduce
+the frozen sequential references bit-for-bit at ``lanes=1`` (same
+transition stream, same evaluation history), reach at least the same eval
+AP50 at ``lanes>1``, and their fused ``lax.scan`` update blocks must match
+eager per-step updates on identical pre-sampled batches.
+"""
+import numpy as np
+import pytest
+
+from repro.core.loops import (run_off_policy, run_offpolicy_sequential,
+                              run_ppo, run_ppo_sequential)
+from repro.core.ppo import PPO, PPOConfig
+from repro.core.replay_buffer import ReplayBuffer
+from repro.core.sac import SAC, SACConfig
+from repro.core.td3 import TD3, TD3Config
+from repro.federation.env import ArmolEnv
+from repro.federation.providers import default_providers
+from repro.federation.traces import generate_traces
+
+TR = generate_traces(default_providers(), 60, seed=0)
+N = TR.n_providers
+
+OFFPOLICY_KW = dict(epochs=2, steps_per_epoch=30, batch_size=32,
+                    start_steps=10, update_after=10, update_every=10,
+                    update_iters=5, log=None, seed=5)
+
+
+def _env(seed=3):
+    return ArmolEnv(TR, mode="gt", beta=-0.03, seed=seed)
+
+
+def _agent(algo, seed=0):
+    env = _env()
+    if algo == "sac":
+        return SAC(SACConfig(state_dim=env.state_dim, n_providers=N,
+                             alpha=0.02, seed=seed))
+    if algo == "td3":
+        return TD3(TD3Config(state_dim=env.state_dim, n_providers=N,
+                             seed=seed))
+    return PPO(PPOConfig(state_dim=env.state_dim, n_providers=N,
+                         minibatch=32, seed=seed))
+
+
+def _strip_wall(history):
+    return [{k: v for k, v in h.items() if k != "wall_s"} for h in history]
+
+
+def _buf(env, seed=5):
+    return ReplayBuffer(1000, env.state_dim, N, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# L=1 bitwise parity: transition stream + evaluation history
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["sac", "td3"])
+def test_offpolicy_lane1_bitwise_parity(algo):
+    env_a, env_b = _env(), _env()
+    buf_a, buf_b = _buf(env_a), _buf(env_b)
+    h_seq = run_offpolicy_sequential(_agent(algo), env_a, buffer=buf_a,
+                                     **OFFPOLICY_KW)
+    h_bat = run_off_policy(_agent(algo), env_b, lanes=1, buffer=buf_b,
+                           **OFFPOLICY_KW)
+    # identical transition stream, bit for bit
+    for field in ("state", "action", "reward", "next_state", "done"):
+        np.testing.assert_array_equal(getattr(buf_a, field),
+                                      getattr(buf_b, field), err_msg=field)
+    assert (buf_a.ptr, buf_a.size) == (buf_b.ptr, buf_b.size)
+    # identical evaluation history (wall time excluded)
+    assert _strip_wall(h_seq) == _strip_wall(h_bat)
+
+
+def test_ppo_lane1_bitwise_parity():
+    env_a, env_b = _env(), _env()
+    h_seq = run_ppo_sequential(_agent("ppo"), env_a, epochs=2,
+                               steps_per_epoch=30, log=None)
+    h_bat = run_ppo(_agent("ppo"), env_b, lanes=1, epochs=2,
+                    steps_per_epoch=30, log=None)
+    assert _strip_wall(h_seq) == _strip_wall(h_bat)
+
+
+# ---------------------------------------------------------------------------
+# L>1: the multi-lane driver trains at least as well on the tiny trace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_offpolicy_multilane_reaches_sequential_ap50():
+    kw = dict(OFFPOLICY_KW, epochs=3, steps_per_epoch=48)
+    h_seq = run_offpolicy_sequential(_agent("sac"), _env(), **kw)
+    h_bat = run_off_policy(_agent("sac"), _env(), lanes=4, **kw)
+    assert h_bat[-1]["steps"] >= h_seq[-1]["steps"]
+    best_seq = max(h["ap50"] for h in h_seq)
+    best_bat = max(h["ap50"] for h in h_bat)
+    assert best_bat >= best_seq - 1e-9, (best_bat, best_seq)
+
+
+@pytest.mark.slow
+def test_ppo_multilane_reaches_sequential_ap50():
+    h_seq = run_ppo_sequential(_agent("ppo"), _env(), epochs=2,
+                               steps_per_epoch=64, log=None)
+    h_bat = run_ppo(_agent("ppo"), _env(), lanes=4, epochs=2,
+                    steps_per_epoch=64, log=None)
+    best_seq = max(h["ap50"] for h in h_seq)
+    best_bat = max(h["ap50"] for h in h_bat)
+    assert best_bat >= best_seq - 1e-9, (best_bat, best_seq)
+
+
+# ---------------------------------------------------------------------------
+# Seed / determinism: lane rng streams must be independent and reproducible
+# ---------------------------------------------------------------------------
+
+def test_batched_driver_seed_determinism():
+    kw = dict(OFFPOLICY_KW, epochs=1, steps_per_epoch=20)
+    runs = {}
+    for tag, seed in (("a", 5), ("b", 5), ("c", 6)):
+        env = _env()
+        buf = _buf(env, seed=seed)
+        runs[tag] = (run_off_policy(_agent("sac"), env, lanes=4, buffer=buf,
+                                    **dict(kw, seed=seed)), buf)
+    h_a, buf_a = runs["a"]
+    h_b, buf_b = runs["b"]
+    h_c, buf_c = runs["c"]
+    assert _strip_wall(h_a) == _strip_wall(h_b)
+    for field in ("state", "action", "reward", "next_state", "done"):
+        np.testing.assert_array_equal(getattr(buf_a, field),
+                                      getattr(buf_b, field))
+    # a different driver seed must change the exploration stream
+    assert not np.array_equal(buf_a.action, buf_c.action)
+
+
+def test_lanes_do_not_share_exploration_rng():
+    """During pure exploration every tick draws per-lane actions from one
+    generator stream — lanes must not all mirror each other."""
+    env = _env()
+    buf = _buf(env)
+    run_off_policy(_agent("sac"), env, lanes=4, buffer=buf,
+                   **dict(OFFPOLICY_KW, epochs=1, steps_per_epoch=16,
+                          start_steps=16, update_after=1000))
+    acts = buf.action[:16].reshape(4, 4, N)   # (ticks, lanes, N)
+    identical_ticks = sum(
+        all(np.array_equal(tick[0], tick[lane]) for lane in range(1, 4))
+        for tick in acts)
+    assert identical_ticks < len(acts)
+
+
+# ---------------------------------------------------------------------------
+# Fused lax.scan update blocks == eager per-step updates
+# ---------------------------------------------------------------------------
+
+def _stacked_batches(rng, iters, batch, state_dim, n):
+    return {"s": rng.standard_normal((iters, batch, state_dim)
+                                     ).astype(np.float32),
+            "a": (rng.random((iters, batch, n)) > 0.5).astype(np.float32),
+            "r": rng.standard_normal((iters, batch)).astype(np.float32),
+            "s2": rng.standard_normal((iters, batch, state_dim)
+                                      ).astype(np.float32),
+            "d": (rng.random((iters, batch)) > 0.8).astype(np.float32)}
+
+
+@pytest.mark.parametrize("algo", ["sac", "td3"])
+def test_update_block_matches_eager_updates(algo):
+    import jax
+    eager, fused = _agent(algo), _agent(algo)
+    state_dim = eager.cfg.state_dim
+    batches = _stacked_batches(np.random.default_rng(0), 6, 32, state_dim, N)
+    for k in range(6):
+        eager.update({key: v[k] for key, v in batches.items()})
+    fused.update_block(batches)
+    for le, lf in zip(jax.tree.leaves(eager.state),
+                      jax.tree.leaves(fused.state)):
+        np.testing.assert_allclose(np.asarray(le), np.asarray(lf),
+                                   rtol=0, atol=1e-6)
+
+
+def test_ppo_update_minibatches_matches_eager():
+    import jax
+    eager, fused = _agent("ppo"), _agent("ppo")
+    rng = np.random.default_rng(1)
+    K, mb = 5, 32
+    state_dim = eager.cfg.state_dim
+    mbs = {"s": rng.standard_normal((K, mb, state_dim)).astype(np.float32),
+           "proto": rng.random((K, mb, N)).astype(np.float32) * 0.9 + 0.05,
+           "logp": rng.standard_normal((K, mb)).astype(np.float32),
+           "adv": rng.standard_normal((K, mb)).astype(np.float32),
+           "ret": rng.standard_normal((K, mb)).astype(np.float32),
+           "w": np.ones((K, mb), np.float32)}
+    for k in range(K):
+        eager.update_minibatch({key: v[k] for key, v in mbs.items()})
+    fused.update_minibatches(mbs)
+    for le, lf in zip(jax.tree.leaves(eager.state),
+                      jax.tree.leaves(fused.state)):
+        np.testing.assert_allclose(np.asarray(le), np.asarray(lf),
+                                   rtol=0, atol=1e-6)
+
+
+def test_ppo_padded_minibatch_ignores_masked_rows():
+    """A weight-0 padded row must not change the update: duplicate the
+    batch with garbage in the padded slots and compare params."""
+    import jax
+    a1, a2 = _agent("ppo"), _agent("ppo")
+    rng = np.random.default_rng(2)
+    mb, pad = 24, 8
+    state_dim = a1.cfg.state_dim
+    base = {"s": rng.standard_normal((mb + pad, state_dim)
+                                     ).astype(np.float32),
+            "proto": rng.random((mb + pad, N)).astype(np.float32) * 0.9
+            + 0.05,
+            "logp": rng.standard_normal(mb + pad).astype(np.float32),
+            "adv": rng.standard_normal(mb + pad).astype(np.float32),
+            "ret": rng.standard_normal(mb + pad).astype(np.float32)}
+    w = np.ones(mb + pad, np.float32)
+    w[mb:] = 0.0
+    garbage = {k: v.copy() for k, v in base.items()}
+    for k in ("s", "logp", "adv", "ret"):
+        garbage[k][mb:] = 1000.0 * (1 + np.arange(pad)
+                                    ).reshape([-1] + [1] * (
+                                        garbage[k].ndim - 1))
+    a1.update_minibatch({**base, "w": w})
+    a2.update_minibatch({**garbage, "w": w})
+    for l1, l2 in zip(jax.tree.leaves(a1.state), jax.tree.leaves(a2.state)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Non-property add_batch/sample_block checks (the hypothesis fuzz versions
+# live in tests/test_replay_buffer_batch.py behind importorskip)
+# ---------------------------------------------------------------------------
+
+def test_add_batch_wraparound_and_overflow():
+    rng = np.random.default_rng(0)
+    scalar = ReplayBuffer(8, 3, 2)
+    batched = ReplayBuffer(8, 3, 2)
+    for B in (5, 6, 20, 0, 3):   # straddles wrap; one batch > capacity
+        s = rng.standard_normal((B, 3)).astype(np.float32)
+        a = rng.standard_normal((B, 2)).astype(np.float32)
+        r = rng.standard_normal(B).astype(np.float32)
+        s2 = rng.standard_normal((B, 3)).astype(np.float32)
+        d = (rng.random(B) > 0.5).astype(np.float32)
+        for i in range(B):
+            scalar.add(s[i], a[i], r[i], s2[i], d[i])
+        batched.add_batch(s, a, r, s2, d)
+        assert (scalar.ptr, scalar.size) == (batched.ptr, batched.size)
+        for field in ("state", "action", "reward", "next_state", "done"):
+            np.testing.assert_array_equal(getattr(scalar, field),
+                                          getattr(batched, field))

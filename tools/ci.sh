@@ -1,15 +1,58 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + a smoke benchmark of the subset-evaluation
-# core (the hot path this repo is built around).
+# CI entry point.
+#
+#   tools/ci.sh          tier-1 lane: import hygiene, fast tests
+#                        (-m "not slow"), subset-cache smoke benchmark
+#   tools/ci.sh --full   everything: slow driver tests + the batched-vs-
+#                        sequential train-driver benchmark
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+FULL=0
+if [[ "${1:-}" == "--full" ]]; then
+    FULL=1
+fi
+
+echo "== hypothesis import hygiene =="
+# hypothesis is an optional dependency: any test importing it without the
+# importorskip guard breaks collection on minimal containers.
+python - <<'PY'
+import pathlib
+import re
+import sys
+
+bad = []
+for path in pathlib.Path("tests").glob("*.py"):
+    src = path.read_text()
+    imp = re.search(r"^\s*(?:from|import)\s+hypothesis\b", src, re.M)
+    if imp is None:
+        continue
+    # the guard must RUN BEFORE the first hypothesis import executes
+    skip = re.search(r"importorskip\(\s*['\"]hypothesis['\"]\s*\)", src)
+    if skip is None or skip.start() > imp.start():
+        bad.append(str(path))
+if bad:
+    sys.exit("hypothesis imported without a preceding "
+             "pytest.importorskip guard: " + ", ".join(bad))
+print("ok")
+PY
+
+if [[ "$FULL" == 1 ]]; then
+    echo "== tests (full, slow included) =="
+    python -m pytest -x -q
+else
+    echo "== tier-1 tests =="
+    python -m pytest -x -q -m "not slow"
+fi
 
 echo "== subset-cache smoke benchmark (50 images) =="
 REPRO_BENCH_IMAGES=50 python benchmarks/run.py subset_cache
+
+if [[ "$FULL" == 1 ]]; then
+    echo "== train-driver benchmark (batched vs sequential) =="
+    python benchmarks/run.py train_driver
+fi
 
 echo "CI OK"
