@@ -5,10 +5,13 @@
 2. Runs the deployable FederationService: image request -> SAC selection ->
    provider fan-out -> word grouping -> WBF ensemble, with cost/latency
    accounting.
+3. Serves the same request stream through the micro-batching
+   AsyncFederationService (sharded caches, one batched forward per flush).
 
   PYTHONPATH=src python examples/serve_provider.py --arch zamba2-2.7b
 """
 import argparse
+import time
 
 import numpy as np
 
@@ -17,6 +20,7 @@ from repro.core.sac import SAC, SACConfig
 from repro.federation.env import ArmolEnv
 from repro.federation.providers import default_providers
 from repro.federation.traces import generate_traces
+from repro.serving.async_service import AsyncFederationService
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.federation_service import FederationService
 
@@ -50,6 +54,21 @@ def main():
         print(f"[federation] image {int(i)}: providers={picked} "
               f"dets={len(res.detections)} cost={res.cost_milli_usd:.0f}m$ "
               f"latency={res.latency_ms:.0f}ms")
+
+    # --- async federation serving: concurrent clients, micro-batched
+    stream = [int(i) for i in
+              np.random.default_rng(1).choice(env.test_idx, 200)]
+    with AsyncFederationService(env, agent, max_batch=16, max_wait_ms=2.0,
+                                workers=4) as asvc:
+        asvc.handle_many(stream[:16])           # warm jit + shards
+        asvc.reset_stats()
+        t0 = time.time()
+        results = [f.result() for f in [asvc.submit(i) for i in stream]]
+        dt = time.time() - t0
+        print(f"[federation/async] {len(results)} requests in {dt:.2f}s "
+              f"({len(results) / max(dt, 1e-9):.0f} req/s, "
+              f"mean flush {asvc.mean_flush_size():.1f}, "
+              f"{asvc.workers} cache shards)")
 
 
 if __name__ == "__main__":

@@ -289,3 +289,120 @@ class SubsetEvaluationCore:
     def cache_sizes(self) -> Dict[str, int]:
         return {"tables": len(self._tables), "ensembles": len(self._ens),
                 "ap_entries": len(self._ap)}
+
+    def config(self) -> Dict[str, object]:
+        """The knobs that change ensemble output — enough to build an
+        equivalent core (see ``ShardedSubsetEvaluationCore.like``)."""
+        return {"voting": self.voting, "ablation": self.ablation,
+                "iou_thr": self.iou_thr, "use_kernel": self.use_kernel}
+
+    def cached_images(self) -> List[int]:
+        return sorted(self._tables)
+
+
+class ShardedSubsetEvaluationCore:
+    """W shared-nothing ``SubsetEvaluationCore`` shards keyed by
+    ``img_idx % W``.
+
+    Each shard owns its own table/ensemble/AP dicts, so W worker threads
+    (one per shard) can serve concurrent flushes without a lock and
+    without ever contending on one dict.  The lookup path is merge-free:
+    an image's home shard is a modulo, never a search, and since the
+    assignment is total and deterministic no entry is ever duplicated
+    across shards — aggregate memory equals the unsharded core's.
+
+    The sharded core intentionally exposes the same single-pair surface
+    (``ensemble`` / ``ap50`` / ``cost`` / ``evaluate`` / ``precompute``)
+    as ``SubsetEvaluationCore`` by delegation, so callers can hold either.
+    Thread safety is *by partition*: it is safe for different threads to
+    touch different shards concurrently; two threads touching the same
+    shard must be externally serialized (the async service runs one
+    single-thread executor per shard).
+    """
+
+    def __init__(self, traces: TraceSet, *, n_shards: int = 4,
+                 voting: str = "affirmative", ablation: str = "wbf",
+                 iou_thr: float = 0.5,
+                 use_kernel: Union[bool, str] = "auto"):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = int(n_shards)
+        self.shards = [
+            SubsetEvaluationCore(traces, voting=voting, ablation=ablation,
+                                 iou_thr=iou_thr, use_kernel=use_kernel)
+            for _ in range(self.n_shards)]
+        self.traces = traces
+        self.n_providers = traces.n_providers
+        self.costs = traces.costs()
+        self.full_mask = (1 << self.n_providers) - 1
+
+    @classmethod
+    def like(cls, core: SubsetEvaluationCore,
+             n_shards: int) -> "ShardedSubsetEvaluationCore":
+        """A sharded core with the same ensemble configuration as ``core``
+        (fresh, empty caches — sharding is a layout, not a migration)."""
+        return cls(core.traces, n_shards=n_shards, **core.config())
+
+    # -- shard addressing (the merge-free lookup path) -------------------
+    def shard_id(self, img_idx: int) -> int:
+        return int(img_idx) % self.n_shards
+
+    def shard_of(self, img_idx: int) -> SubsetEvaluationCore:
+        return self.shards[int(img_idx) % self.n_shards]
+
+    def partition(self, img_indices: Sequence[int]
+                  ) -> Dict[int, List[int]]:
+        """shard id -> that shard's images, preserving request order.
+        ``shard_id`` is the single source of the assignment rule."""
+        groups: Dict[int, List[int]] = {}
+        for i in img_indices:
+            groups.setdefault(self.shard_id(i), []).append(int(i))
+        return groups
+
+    # -- delegated evaluation surface ------------------------------------
+    def mask_of(self, action: np.ndarray) -> int:
+        return action_to_mask(action)
+
+    def precompute(self, img_indices: Sequence[int]) -> None:
+        for sid, imgs in self.partition(img_indices).items():
+            self.shards[sid].precompute(imgs)
+
+    def ensemble(self, img_idx: int, mask: int) -> Detections:
+        return self.shard_of(img_idx).ensemble(img_idx, mask)
+
+    def pseudo_gt(self, img_idx: int) -> Detections:
+        return self.shard_of(img_idx).pseudo_gt(img_idx)
+
+    def ap50(self, img_idx: int, mask: int, *, against: str = "gt") -> float:
+        return self.shard_of(img_idx).ap50(img_idx, mask, against=against)
+
+    def cost(self, mask: int) -> float:
+        # mask costs are image-independent; shard 0 is their (sole) home
+        return self.shards[0].cost(mask)
+
+    def evaluate(self, img_idx: int, action: np.ndarray, *,
+                 beta: float = 0.0,
+                 against: str = "gt") -> Tuple[float, float, float]:
+        return self.shard_of(img_idx).evaluate(img_idx, action, beta=beta,
+                                               against=against)
+
+    # -- aggregate introspection ----------------------------------------
+    def cache_sizes(self) -> Dict[str, int]:
+        agg = {"tables": 0, "ensembles": 0, "ap_entries": 0}
+        for s in self.shards:
+            for k, v in s.cache_sizes().items():
+                agg[k] += v
+        return agg
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        agg: Dict[str, int] = {}
+        for s in self.shards:
+            for k, v in s.stats.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def shard_images(self) -> List[List[int]]:
+        """Per-shard cached image ids — the corruption-check surface: every
+        entry of ``shard_images()[s]`` must satisfy ``img % W == s``."""
+        return [s.cached_images() for s in self.shards]

@@ -1,7 +1,19 @@
-"""Provider-side serving driver: batched prefill+decode on a reduced arch.
+"""Serving drivers behind one launch entry point.
+
+Provider-side LM serving: batched prefill+decode on a reduced arch.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --requests 8 --prompt-len 32 --new-tokens 16
+
+Federation-side request serving: ``--federation`` routes a stream of
+image requests through the Armol selector + provider fan-out + ensemble.
+The default path is the synchronous ``FederationService``; ``--async``
+switches to the micro-batching ``AsyncFederationService`` (``--workers``
+cache shards / ensemble threads, flush at ``--max-batch`` requests or
+``--max-wait-ms``, whichever comes first).
+
+  PYTHONPATH=src python -m repro.launch.serve --federation --async \
+      --requests 600 --workers 4 --max-batch 16 --max-wait-ms 2
 """
 from __future__ import annotations
 
@@ -10,22 +22,94 @@ import time
 
 import numpy as np
 
-from repro.configs.base import get_arch
-from repro.serving.engine import Request, ServeEngine
+
+def run_federation(args) -> int:
+    from repro.core.sac import SAC, SACConfig
+    from repro.federation.env import ArmolEnv
+    from repro.federation.providers import default_providers
+    from repro.federation.traces import generate_traces
+    from repro.serving.async_service import AsyncFederationService
+    from repro.serving.federation_service import FederationService
+
+    traces = generate_traces(default_providers(), args.images,
+                             seed=args.seed)
+    env = ArmolEnv(traces, mode="gt", beta=0.0, seed=args.seed + 1)
+    agent = SAC(SACConfig(state_dim=env.state_dim,
+                          n_providers=env.n_providers, seed=args.seed))
+    rng = np.random.default_rng(args.seed)
+    reqs = [int(i) for i in rng.integers(0, args.images, args.requests)]
+    mode = "async" if args.use_async else "sync"
+    print(f"[serve] federation ({mode}): {env.n_providers} providers, "
+          f"{args.images} images, {args.requests} requests")
+
+    if args.use_async:
+        with AsyncFederationService(
+                env, agent, max_batch=args.max_batch,
+                max_wait_ms=args.max_wait_ms,
+                workers=args.workers) as svc:
+            svc.handle_many(reqs[:args.max_batch])      # warm jit + shards
+            svc.reset_stats()
+            t0 = time.time()
+            futures = [svc.submit(i) for i in reqs]
+            results = [f.result() for f in futures]
+            dt = time.time() - t0
+            extra = (f" mean_flush={svc.mean_flush_size():.1f}"
+                     f" flushes={svc.stats['flushes']}"
+                     f" shards={svc.workers}")
+    else:
+        svc = FederationService(env, agent)
+        svc.handle(reqs[0])                             # warm jit
+        t0 = time.time()
+        results = [svc.handle(i) for i in reqs]
+        dt = time.time() - t0
+        extra = ""
+
+    cost = sum(r.cost_milli_usd for r in results)
+    lat = np.asarray([r.latency_ms for r in results])
+    print(f"[serve] {len(results)} requests in {dt:.2f}s "
+          f"({len(results) / max(dt, 1e-9):.0f} req/s){extra}")
+    print(f"[serve] accounted cost={cost:.1f} mUSD, modeled latency "
+          f"p50={np.percentile(lat, 50):.0f}ms "
+          f"p99={np.percentile(lat, 99):.0f}ms")
+    return 0
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="",
+                    help="LM architecture (required unless --federation)")
     ap.add_argument("--full", action="store_true",
                     help="full-size config (default: reduced)")
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="request count (default: 8 LM, 400 federation)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--federation", action="store_true",
+                    help="serve federation requests instead of the LM")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="micro-batching AsyncFederationService")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="async: cache shards / ensemble worker threads")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="async: flush when this many requests queue")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="async: flush when the oldest request is this old")
+    ap.add_argument("--images", type=int, default=120,
+                    help="federation: trace-set size")
     args = ap.parse_args()
+
+    if args.requests is None:
+        args.requests = 400 if args.federation else 8
+    if args.federation:
+        return run_federation(args)
+    if not args.arch:
+        ap.error("--arch is required unless --federation is given")
+
+    from repro.configs.base import get_arch
+    from repro.serving.engine import Request, ServeEngine
 
     cfg = get_arch(args.arch)
     if not args.full:

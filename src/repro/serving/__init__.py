@@ -1,2 +1,4 @@
 from repro.serving.engine import ServeEngine, Request  # noqa: F401
-from repro.serving.federation_service import FederationService  # noqa: F401
+from repro.serving.federation_service import (  # noqa: F401
+    FederationResult, FederationService)
+from repro.serving.async_service import AsyncFederationService  # noqa: F401

@@ -1,0 +1,213 @@
+"""Async federation serving: micro-batching + sharded caches.
+
+``FederationService.handle`` pays one jitted agent dispatch per request —
+fine for a demo, hopeless under traffic.  ``AsyncFederationService``
+turns the service into an open system:
+
+  * **submit/handle** — clients (any number of threads) enqueue requests;
+    each gets a ``concurrent.futures.Future`` of a ``FederationResult``.
+  * **micro-batching** — a dispatcher thread coalesces queued requests
+    and flushes when ``max_batch`` are waiting or the oldest has waited
+    ``max_wait_ms``.  Each flush costs ONE batched agent forward (the
+    whole point: the per-call jit dispatch overhead is amortized over the
+    flush) and one batched IoU precompute per touched shard.
+  * **sharded caches** — the subset-evaluation memo is split across W
+    shared-nothing shards by ``img_idx % W``
+    (``ShardedSubsetEvaluationCore``).  Each shard is owned by its own
+    single-thread executor, so concurrent flushes never contend on one
+    dict and no locks guard the hot lookup path.
+  * **overlap** — the dispatcher hands each shard's slice of the flush to
+    that shard's worker and immediately returns to batching: provider
+    fan-out/ensemble assembly (the thread pool over the vectorized
+    ``_account_batch``; provider "inference" is parallel-latency in the
+    paper's model, Sec. II-B) overlaps the NEXT flush's agent forward.
+
+At ``max_batch=1, workers=1`` every request is its own flush through the
+same single-state ``select_action`` call ``handle`` makes, so results are
+identical to the synchronous service (``tests/test_async_service.py``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.federation.env import ArmolEnv
+from repro.federation.evaluation import ShardedSubsetEvaluationCore
+from repro.serving.federation_service import (FederationResult,
+                                              FederationService)
+
+
+class AsyncFederationService:
+    """Micro-batching front-end over ``FederationService``.
+
+    Parameters
+    ----------
+    max_batch:    flush when this many requests are queued.
+    max_wait_ms:  ... or when the oldest queued request is this old.
+    workers:      cache shards == single-thread ensemble workers.
+
+    Use as a context manager (or call ``close()``): a dispatcher thread
+    and W worker threads run behind the scenes.
+    """
+
+    def __init__(self, env: ArmolEnv, agent, *, deterministic: bool = True,
+                 transmission_ms: float = 20.0, max_batch: int = 16,
+                 max_wait_ms: float = 2.0, workers: int = 2):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.env = env
+        self.agent = agent
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self.workers = int(workers)
+        self.core = ShardedSubsetEvaluationCore.like(env.core, workers)
+        self._svc = FederationService(env, agent,
+                                      deterministic=deterministic,
+                                      transmission_ms=transmission_ms)
+        from repro.core.loops import agent_policy
+        self._policy = agent_policy(agent, deterministic=deterministic)
+
+        self._cv = threading.Condition()
+        self._queue: deque = deque()    # (img_idx, enqueue_t, future)
+        self._closed = False
+        self.stats = {"requests": 0, "flushes": 0, "batched_requests": 0,
+                      "max_flush": 0}
+        self._shard_pools = [
+            ThreadPoolExecutor(max_workers=1,
+                               thread_name_prefix=f"fed-shard-{i}")
+            for i in range(self.workers)]
+        self._dispatcher = threading.Thread(target=self._dispatch_loop,
+                                            name="fed-dispatch", daemon=True)
+        self._dispatcher.start()
+
+    # -- client surface --------------------------------------------------
+    def submit(self, img_idx: int) -> "Future[FederationResult]":
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("AsyncFederationService is closed")
+            self._queue.append((int(img_idx), time.monotonic(), fut))
+            self._cv.notify()
+        return fut
+
+    def handle(self, img_idx: int) -> FederationResult:
+        return self.submit(img_idx).result()
+
+    def handle_many(self, img_indices: Sequence[int]
+                    ) -> List[FederationResult]:
+        futs = [self.submit(i) for i in img_indices]
+        return [f.result() for f in futs]
+
+    # -- dispatcher ------------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if not self._queue:     # closed and drained
+                    return
+                deadline = self._queue[0][1] + self.max_wait_s
+                while len(self._queue) < self.max_batch and not self._closed:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cv.wait(timeout=remaining)
+                batch = [self._queue.popleft()
+                         for _ in range(min(self.max_batch,
+                                            len(self._queue)))]
+            try:
+                self._flush(batch)
+            except BaseException as e:   # keep serving after a bad flush
+                for _, _, fut in batch:
+                    if not fut.done():
+                        fut.set_exception(e)
+
+    def _flush(self, batch) -> None:
+        imgs = np.asarray([b[0] for b in batch], np.int64)
+        if len(batch) == 1:
+            # same single-state act path as FederationService.handle, so
+            # max_batch=1 is result-identical to the synchronous service
+            a, _ = self.agent.select_action(
+                self.env.features[imgs[0]],
+                deterministic=self._svc.deterministic)
+            actions = np.asarray(a, np.float32).reshape(1, -1)
+        else:
+            # pad the flush to max_batch so the batched forward is shape-
+            # stable: one jit compile for the service's lifetime instead
+            # of one per distinct queue depth (row-independent MLP heads
+            # make the padding rows inert)
+            feats = self.env.features[imgs]
+            if len(batch) < self.max_batch:
+                pad = np.broadcast_to(
+                    feats[-1], (self.max_batch - len(batch),
+                                feats.shape[1]))
+                feats = np.concatenate([feats, pad], axis=0)
+            actions = np.asarray(self._policy.select_batch(feats),
+                                 np.float32)[:len(batch)]
+        with self._cv:      # counters race with reset_stats() otherwise
+            self.stats["flushes"] += 1
+            self.stats["requests"] += len(batch)
+            if len(batch) > 1:
+                self.stats["batched_requests"] += len(batch)
+            self.stats["max_flush"] = max(self.stats["max_flush"],
+                                          len(batch))
+        # fan out by home shard; the dispatcher does NOT wait — ensemble
+        # assembly overlaps the next flush's agent forward
+        for sid, positions in self._partition(imgs).items():
+            self._shard_pools[sid].submit(
+                self._account_shard, sid,
+                [batch[p] for p in positions], actions[positions])
+
+    def _partition(self, imgs: np.ndarray):
+        groups: dict = {}
+        for pos, img in enumerate(imgs):
+            groups.setdefault(self.core.shard_id(img), []).append(pos)
+        return groups
+
+    def _account_shard(self, sid: int, items, actions: np.ndarray) -> None:
+        """Runs on shard ``sid``'s dedicated thread — the only thread that
+        ever touches that shard's dicts."""
+        try:
+            shard = self.core.shards[sid]
+            imgs = [it[0] for it in items]
+            shard.precompute(imgs)      # one batched IoU launch per shard
+            results = self._svc._account_batch(imgs, actions, core=shard)
+            for (_, _, fut), res in zip(items, results):
+                fut.set_result(res)
+        except BaseException as e:
+            for _, _, fut in items:
+                if not fut.done():
+                    fut.set_exception(e)
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self) -> None:
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify_all()
+        self._dispatcher.join()
+        for pool in self._shard_pools:
+            pool.shutdown(wait=True)
+
+    def __enter__(self) -> "AsyncFederationService":
+        return self
+
+    def __exit__(self, *exc) -> Optional[bool]:
+        self.close()
+        return None
+
+    def mean_flush_size(self) -> float:
+        return self.stats["requests"] / max(self.stats["flushes"], 1)
+
+    def reset_stats(self) -> None:
+        """Zero the flush counters (e.g. after warm-up traffic), so
+        reported batching stats cover only the measured window."""
+        with self._cv:
+            for k in self.stats:
+                self.stats[k] = 0

@@ -11,7 +11,13 @@ over selected providers + per-provider transmission, Sec. II-B).
 ``handle_many`` is the batch path for heavy traffic: ONE agent forward
 pass over all request features, one batched IoU precompute, then per-
 request assembly from the memoized subset-evaluation core — repeat images
-and repeat (image, subset) pairs cost a dict lookup.
+and repeat (image, subset) pairs cost a dict lookup.  Cost/latency
+accounting is vectorized over the whole flush (``_account_batch``); the
+empty selection returns an explicit zero-cost/zero-latency result.
+
+``repro.serving.async_service.AsyncFederationService`` layers a
+micro-batching queue and a sharded cache on top of this service for
+concurrent clients.
 """
 from __future__ import annotations
 
@@ -39,20 +45,49 @@ class FederationService:
         self.agent = agent
         self.deterministic = deterministic
         self.transmission_ms = transmission_ms
+        self.provider_latency_ms = np.asarray(
+            [p.latency_ms for p in env.traces.providers], np.float64)
+        self._mask_weights = np.left_shift(
+            np.int64(1), np.arange(env.n_providers, dtype=np.int64))
+
+    def _account_batch(self, imgs: Sequence[int], actions: np.ndarray,
+                       *, core=None) -> List[FederationResult]:
+        """Vectorized ensemble + cost/latency bookkeeping for one flush.
+
+        One numpy pass computes every request's subset mask, summed fee,
+        and latency (transmission is sequential over selected providers;
+        inference is parallel -> max latency, paper Sec. II-B); only the
+        memoized ensemble lookups remain per-request.  ``core`` defaults
+        to the env's shared cache — the async service passes the request's
+        home shard instead.
+        """
+        core = self.env.core if core is None else core
+        acts = np.asarray(actions, np.float32).reshape(
+            len(imgs), self.env.n_providers)
+        sel = acts > 0.5
+        n_sel = sel.sum(axis=1)
+        masks = (sel * self._mask_weights).sum(axis=1)
+        cost = np.where(sel, self.env.costs, np.float32(0.0)).sum(axis=1)
+        inf_lat = np.max(np.where(sel, self.provider_latency_ms, -np.inf),
+                         axis=1)
+        latency = np.where(n_sel > 0,
+                           self.transmission_ms * n_sel + inf_lat, 0.0)
+        out = []
+        for t, img in enumerate(imgs):
+            if n_sel[t] == 0:
+                # explicit empty route: nothing selected, nothing billed
+                out.append(FederationResult(Detections.empty(), acts[t],
+                                            0.0, 0.0))
+                continue
+            ens = core.ensemble(int(img), int(masks[t]))
+            out.append(FederationResult(ens, acts[t], float(cost[t]),
+                                        float(latency[t])))
+        return out
 
     def _account(self, img_idx: int,
                  action: np.ndarray) -> FederationResult:
-        """Ensemble + cost/latency bookkeeping for one routed request."""
-        sel = np.where(action > 0.5)[0]
-        ens = self.env.core.ensemble(img_idx,
-                                     self.env.core.mask_of(action))
-        cost = float(np.sum(self.env.costs[sel]))
-        # transmission is sequential over selected providers; inference is
-        # parallel -> max latency (paper Sec. II-B)
-        lats = [self.env.traces.providers[i].latency_ms for i in sel]
-        latency = self.transmission_ms * len(sel) + (max(lats) if lats
-                                                     else 0.0)
-        return FederationResult(ens, action, cost, latency)
+        """Single-request accounting (thin wrapper over the batch path)."""
+        return self._account_batch([img_idx], np.asarray(action)[None])[0]
 
     def handle(self, img_idx: int) -> FederationResult:
         s = self.env.features[img_idx]
@@ -68,5 +103,4 @@ class FederationService:
         policy = agent_policy(self.agent, deterministic=self.deterministic)
         actions = policy.select_batch(self.env.features[np.asarray(imgs)])
         self.env.core.precompute(imgs)
-        return [self._account(img, np.asarray(a))
-                for img, a in zip(imgs, actions)]
+        return self._account_batch(imgs, actions)

@@ -1,7 +1,9 @@
 """Property tests for the combinatorial action mapping tau (paper Eq. 3-4)."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
 
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402

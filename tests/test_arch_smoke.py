@@ -2,10 +2,12 @@
 step on CPU, asserting output shapes and no NaNs (assignment requirement)."""
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
 from repro.configs.base import ARCH_IDS, ShapeConfig, get_arch
 from repro.data.pipeline import batch_for

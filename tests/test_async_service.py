@@ -1,0 +1,176 @@
+"""AsyncFederationService: parity with the synchronous service, cache
+shard integrity under concurrent clients, and exact cost accounting.
+
+Parity: with ``max_batch=1, workers=1`` every request is its own flush
+through the same single-state act path as ``FederationService.handle``,
+so results must be identical — detections, action, cost, latency.
+
+Concurrency: N client threads submit interleaved request streams; the
+sharded subset-evaluation caches must stay partitioned (every image in
+shard s satisfies ``img % W == s``, no duplicates across shards) and the
+summed cost must equal the synchronous reference total exactly.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core.sac import SAC, SACConfig
+from repro.ensemble.boxes import Detections
+from repro.federation.env import ArmolEnv
+from repro.federation.evaluation import ShardedSubsetEvaluationCore
+from repro.federation.providers import default_providers
+from repro.federation.traces import generate_traces
+from repro.serving.async_service import AsyncFederationService
+from repro.serving.federation_service import FederationService
+
+TR = generate_traces(default_providers(), 40, seed=5)
+ENV = ArmolEnv(TR, mode="gt", beta=0.0, seed=0)
+
+
+class FixedAgent:
+    """Always selects the same subset (batched-aware, like the real ones)."""
+
+    def __init__(self, action):
+        self.action = np.asarray(action, np.float32)
+
+    def select_action(self, s, *, deterministic=False):
+        s = np.asarray(s)
+        if s.ndim == 2:
+            return np.tile(self.action, (len(s), 1)), None
+        return self.action.copy(), None
+
+
+def _sac():
+    return SAC(SACConfig(state_dim=ENV.state_dim,
+                         n_providers=ENV.n_providers, hidden=(16, 16)))
+
+
+def _assert_results_equal(got, ref):
+    np.testing.assert_array_equal(got.action, ref.action)
+    assert got.cost_milli_usd == ref.cost_milli_usd
+    assert got.latency_ms == ref.latency_ms
+    np.testing.assert_array_equal(got.detections.boxes, ref.detections.boxes)
+    np.testing.assert_array_equal(got.detections.scores,
+                                  ref.detections.scores)
+    np.testing.assert_array_equal(got.detections.labels,
+                                  ref.detections.labels)
+
+
+def test_parity_with_handle_max_batch_1():
+    """max_batch=1, workers=1 is result-identical to the sync service on a
+    fixed trace, with a real (deterministic) agent."""
+    agent = _sac()
+    svc = FederationService(ENV, agent)
+    imgs = [int(i) for i in
+            np.random.default_rng(3).integers(0, len(TR), 30)]
+    refs = [svc.handle(i) for i in imgs]
+    with AsyncFederationService(ENV, agent, max_batch=1,
+                                workers=1) as asvc:
+        for img, ref in zip(imgs, refs):
+            _assert_results_equal(asvc.handle(img), ref)
+
+
+def test_batched_flush_matches_sync_service():
+    """Full flushes (padded batched forward + shard fan-out) agree with
+    the synchronous reference for a fixed-action agent."""
+    agent = FixedAgent([1, 0, 1])
+    svc = FederationService(ENV, agent)
+    imgs = list(range(len(TR))) * 2
+    with AsyncFederationService(ENV, agent, max_batch=8, workers=3,
+                                max_wait_ms=50.0) as asvc:
+        got = asvc.handle_many(imgs)
+    for img, res in zip(imgs, got):
+        _assert_results_equal(res, svc.handle(img))
+
+
+def test_empty_selection_is_zero_cost_zero_latency():
+    with AsyncFederationService(ENV, FixedAgent([0, 0, 0]), max_batch=4,
+                                workers=2) as asvc:
+        res = asvc.handle(5)
+    assert len(res.detections) == 0
+    np.testing.assert_array_equal(res.detections.boxes,
+                                  Detections.empty().boxes)
+    assert res.cost_milli_usd == 0.0
+    assert res.latency_ms == 0.0
+
+
+def test_concurrent_clients_shard_integrity_and_accounting():
+    workers = 3
+    agent = FixedAgent([0, 1, 1])
+    svc = FederationService(ENV, agent)
+    rng = np.random.default_rng(11)
+    streams = [[int(i) for i in rng.integers(0, len(TR), 60)]
+               for _ in range(4)]
+    collected = [None] * len(streams)
+
+    with AsyncFederationService(ENV, agent, max_batch=8, workers=workers,
+                                max_wait_ms=1.0) as asvc:
+        def client(k):
+            futs = [asvc.submit(i) for i in streams[k]]
+            collected[k] = [f.result() for f in futs]
+
+        threads = [threading.Thread(target=client, args=(k,))
+                   for k in range(len(streams))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        shard_images = asvc.core.shard_images()
+        cache_total = asvc.core.cache_sizes()
+
+    # no cache corruption: every cached image sits in its home shard only
+    for sid, imgs in enumerate(shard_images):
+        assert all(i % workers == sid for i in imgs), (sid, imgs)
+    all_cached = [i for imgs in shard_images for i in imgs]
+    assert len(all_cached) == len(set(all_cached))       # no duplicates
+    assert set(all_cached) == {i for s in streams for i in s}
+    assert cache_total["tables"] == len(set(all_cached))
+
+    # exact accounting: per-request results and totals match the sync path
+    for k, stream in enumerate(streams):
+        for img, res in zip(stream, collected[k]):
+            _assert_results_equal(res, svc.handle(img))
+    got_total = sum(r.cost_milli_usd for res in collected for r in res)
+    want_total = sum(svc.handle(i).cost_milli_usd
+                     for s in streams for i in s)
+    assert got_total == want_total
+
+
+def test_sharded_core_partition_and_delegation():
+    core = ShardedSubsetEvaluationCore.like(ENV.core, 4)
+    groups = core.partition([0, 1, 2, 3, 4, 5, 8, 9])
+    assert groups == {0: [0, 4, 8], 1: [1, 5, 9], 2: [2], 3: [3]}
+    mask = core.mask_of(np.asarray([1, 1, 0], np.float32))
+    ref = ENV.core.ensemble(6, mask)
+    got = core.ensemble(6, mask)
+    np.testing.assert_array_equal(got.boxes, ref.boxes)
+    assert core.cost(mask) == ENV.core.cost(mask)
+    assert core.ap50(6, mask) == ENV.core.ap50(6, mask)
+    sizes = core.cache_sizes()
+    assert sizes["tables"] == 1 and sizes["ensembles"] >= 1
+    assert core.shard_images()[6 % 4] == [6]
+
+
+def test_submit_after_close_raises():
+    asvc = AsyncFederationService(ENV, FixedAgent([1, 0, 0]), max_batch=2,
+                                  workers=1)
+    assert asvc.handle(0).cost_milli_usd == ENV.costs[0]
+    asvc.close()
+    with pytest.raises(RuntimeError):
+        asvc.submit(1)
+    asvc.close()        # idempotent
+
+
+def test_queued_requests_drain_on_close():
+    """close() must flush requests already queued, not drop them."""
+    asvc = AsyncFederationService(ENV, FixedAgent([1, 1, 0]),
+                                  max_batch=64, max_wait_ms=10_000.0,
+                                  workers=2)
+    futs = [asvc.submit(i) for i in range(10)]
+    asvc.close()        # deadline far away: close triggers the flush
+    for f in futs:
+        assert f.result(timeout=5).cost_milli_usd == pytest.approx(
+            float(ENV.costs[0] + ENV.costs[1]))

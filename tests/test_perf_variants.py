@@ -4,10 +4,12 @@ import os
 import subprocess
 import sys
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
 from repro.configs.base import ShapeConfig, get_arch
 from repro.data.pipeline import batch_for

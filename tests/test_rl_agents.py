@@ -1,8 +1,10 @@
 """RL agent unit tests: update mechanics + learning on a tiny bandit."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
 from repro.core import networks as nets
 from repro.core.ppo import PPO, PPOConfig

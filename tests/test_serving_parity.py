@@ -3,10 +3,12 @@ including the sliding-window ring cache across wrap-around, and the serving
 engine must run end-to-end."""
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax")
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
 from repro.configs.base import ARCH_IDS, ShapeConfig, get_arch
 from repro.data.pipeline import batch_for

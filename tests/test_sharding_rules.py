@@ -1,9 +1,12 @@
 """Sharding-rule unit tests (pure PartitionSpec logic — no devices) and a
 small real-mesh pjit integration test on the host device."""
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
+import pytest
+
+pytest.importorskip("jax")
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.configs.base import get_arch
 from repro.launch import sharding as shd

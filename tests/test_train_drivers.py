@@ -9,6 +9,8 @@ eager per-step updates on identical pre-sampled batches.
 import numpy as np
 import pytest
 
+pytest.importorskip("jax")
+
 from repro.core.loops import (run_off_policy, run_offpolicy_sequential,
                               run_ppo, run_ppo_sequential)
 from repro.core.ppo import PPO, PPOConfig

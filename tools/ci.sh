@@ -3,8 +3,12 @@
 #
 #   tools/ci.sh          tier-1 lane: import hygiene, fast tests
 #                        (-m "not slow"), subset-cache smoke benchmark
-#   tools/ci.sh --full   everything: slow driver tests + the batched-vs-
-#                        sequential train-driver benchmark
+#   tools/ci.sh --full   everything: slow driver tests + the benchmark
+#                        regression gates (tools/check_bench.py compares
+#                        fresh subset_cache/serving/train_driver numbers
+#                        against the committed benchmarks/results/*.json
+#                        baselines; REPRO_BENCH_TOLERANCE overrides the
+#                        30% gate on noisy runners)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,26 +19,28 @@ if [[ "${1:-}" == "--full" ]]; then
     FULL=1
 fi
 
-echo "== hypothesis import hygiene =="
-# hypothesis is an optional dependency: any test importing it without the
-# importorskip guard breaks collection on minimal containers.
+echo "== optional-dependency import hygiene =="
+# hypothesis (property tests) and jax (accelerator extras) are optional
+# on minimal containers: any test importing them without a preceding
+# pytest.importorskip guard breaks collection there.
 python - <<'PY'
 import pathlib
 import re
 import sys
 
 bad = []
-for path in pathlib.Path("tests").glob("*.py"):
-    src = path.read_text()
-    imp = re.search(r"^\s*(?:from|import)\s+hypothesis\b", src, re.M)
-    if imp is None:
-        continue
-    # the guard must RUN BEFORE the first hypothesis import executes
-    skip = re.search(r"importorskip\(\s*['\"]hypothesis['\"]\s*\)", src)
-    if skip is None or skip.start() > imp.start():
-        bad.append(str(path))
+for mod in ("hypothesis", "jax"):
+    for path in pathlib.Path("tests").glob("*.py"):
+        src = path.read_text()
+        imp = re.search(rf"^\s*(?:from|import)\s+{mod}\b", src, re.M)
+        if imp is None:
+            continue
+        # the guard must RUN BEFORE the first import executes
+        skip = re.search(rf"importorskip\(\s*['\"]{mod}['\"]\s*\)", src)
+        if skip is None or skip.start() > imp.start():
+            bad.append(f"{path} ({mod})")
 if bad:
-    sys.exit("hypothesis imported without a preceding "
+    sys.exit("optional dependency imported without a preceding "
              "pytest.importorskip guard: " + ", ".join(bad))
 print("ok")
 PY
@@ -47,12 +53,15 @@ else
     python -m pytest -x -q -m "not slow"
 fi
 
-echo "== subset-cache smoke benchmark (50 images) =="
-REPRO_BENCH_IMAGES=50 python benchmarks/run.py subset_cache
-
 if [[ "$FULL" == 1 ]]; then
-    echo "== train-driver benchmark (batched vs sequential) =="
-    python benchmarks/run.py train_driver
+    echo "== benchmark regression gates (fresh vs committed baselines) =="
+    python tools/check_bench.py subset_cache serving train_driver
+else
+    echo "== subset-cache smoke benchmark (50 images) =="
+    # scratch results dir: the committed baselines under benchmarks/
+    # results/ are the check_bench reference and must not be clobbered
+    REPRO_RESULTS_DIR="$(mktemp -d)" REPRO_BENCH_IMAGES=50 \
+        python benchmarks/run.py subset_cache
 fi
 
 echo "CI OK"
