@@ -18,7 +18,7 @@ batches against precomputed per-image IoU tables.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple, Union
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -36,7 +36,8 @@ class ArmolEnv:
                  beta: float = 0.0, voting: str = "affirmative",
                  ablation: str = "wbf", train_frac: float = 0.7,
                  seed: int = 0, feat_dim: int = 64,
-                 use_kernel: Union[bool, str] = "auto"):
+                 use_kernel: Union[bool, str] = "auto",
+                 core: Optional[SubsetEvaluationCore] = None):
         assert mode in ("gt", "nogt")
         self.traces = traces
         self.mode = mode
@@ -46,7 +47,9 @@ class ArmolEnv:
         self.rng = np.random.default_rng(seed)
         self.n_providers = traces.n_providers
         self.costs = traces.costs()
-        self.core = SubsetEvaluationCore(
+        # callers holding a pre-warmed core (e.g. a scenario pool's
+        # segment-0 core) inject it instead of building a cold one
+        self.core = core if core is not None else SubsetEvaluationCore(
             traces, voting=voting, ablation=ablation, use_kernel=use_kernel)
 
         # --- state features (precomputed once, like the paper's MobileNet):
@@ -106,10 +109,17 @@ class ArmolEnv:
                                         against=self._against)
 
     # ------------------------------------------------------------------
+    def _episode_order(self, idx: np.ndarray, shuffle: bool) -> np.ndarray:
+        """One episode's image visit order — the single override point for
+        request-distribution dynamics (a non-stationary env reweights it
+        under demand shifts).  Draws from ``self.rng`` exactly as the
+        historical inline permutation did."""
+        return self.rng.permutation(idx) if shuffle else idx.copy()
+
     def reset(self, *, split: str = "train",
               shuffle: bool = True) -> np.ndarray:
         idx = self.train_idx if split == "train" else self.test_idx
-        self._order = self.rng.permutation(idx) if shuffle else idx.copy()
+        self._order = self._episode_order(idx, shuffle)
         self._t = 0
         return self.features[self._order[0]]
 
@@ -136,9 +146,8 @@ class ArmolEnv:
                     shuffle: bool = True) -> np.ndarray:
         idx = self.train_idx if split == "train" else self.test_idx
         self._lane_split = (split, shuffle)
-        self._lane_orders = [
-            self.rng.permutation(idx) if shuffle else idx.copy()
-            for _ in range(n_lanes)]
+        self._lane_orders = [self._episode_order(idx, shuffle)
+                             for _ in range(n_lanes)]
         self._lane_t = np.zeros(n_lanes, np.int64)
         return self.features[[int(o[0]) for o in self._lane_orders]]
 
@@ -174,8 +183,7 @@ class ArmolEnv:
         split, shuffle = self._lane_split
         idx = self.train_idx if split == "train" else self.test_idx
         for lane in np.flatnonzero(dones):
-            self._lane_orders[lane] = (self.rng.permutation(idx) if shuffle
-                                       else idx.copy())
+            self._lane_orders[lane] = self._episode_order(idx, shuffle)
             self._lane_t[lane] = 0
         infos = {"ap50": out["ap50"], "cost": out["cost"], "image": imgs}
         return nxt, out["reward"], dones, infos, self.lane_states()

@@ -286,6 +286,25 @@ class SubsetEvaluationCore:
                 best_v, best_m = v, m
         return best_m, best_v
 
+    def invalidate_images(self, img_indices: Sequence[int]) -> int:
+        """Drop every cached artifact touching the given images (table,
+        ensembles, AP entries) — the hook for in-place trace mutation,
+        e.g. a scenario segment rewriting one provider's detections.
+        Returns the number of tables actually dropped."""
+        drop = {int(i) for i in img_indices}
+        dropped = 0
+        for i in drop:
+            if self._tables.pop(i, None) is not None:
+                dropped += 1
+        if drop:
+            # pop the doomed keys instead of rebuilding the dicts: a
+            # single-image invalidation must not cost O(total cache)
+            for k in [k for k in self._ens if k[0] in drop]:
+                del self._ens[k]
+            for k in [k for k in self._ap if k[0] in drop]:
+                del self._ap[k]
+        return dropped
+
     def cache_sizes(self) -> Dict[str, int]:
         return {"tables": len(self._tables), "ensembles": len(self._ens),
                 "ap_entries": len(self._ap)}
@@ -385,6 +404,15 @@ class ShardedSubsetEvaluationCore:
                  against: str = "gt") -> Tuple[float, float, float]:
         return self.shard_of(img_idx).evaluate(img_idx, action, beta=beta,
                                                against=against)
+
+    def invalidate_images(self, img_indices: Sequence[int]) -> int:
+        """Per-shard invalidation through the same partition rule as every
+        other delegated call, so entries are dropped exactly where they
+        live."""
+        dropped = 0
+        for sid, imgs in self.partition(img_indices).items():
+            dropped += self.shards[sid].invalidate_images(imgs)
+        return dropped
 
     # -- aggregate introspection ----------------------------------------
     def cache_sizes(self) -> Dict[str, int]:

@@ -13,8 +13,9 @@ points better than the rest.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 from repro.federation.vocab import COCO_TEMPLATE
 
@@ -25,8 +26,17 @@ _AZURE_SWEET = {"cup", "bottle", "dining table"}
 _GOOGLE_SWEET = {"book"}
 
 
-@dataclass
+@dataclass(frozen=True)
 class ProviderProfile:
+    """Immutable provider snapshot.
+
+    Frozen on purpose: profiles are consumed as value objects by trace
+    generation and the memoized subset-evaluation caches, so in-place
+    mutation (e.g. by a scenario schedule) would silently alias cached
+    state.  Derive variants through :meth:`replace`, which bumps ``rev``
+    so two snapshots of the same provider are distinguishable, and key
+    caches on :meth:`fingerprint`.
+    """
     name: str
     base_recall: float
     sweet: Dict[str, float] = field(default_factory=dict)   # cat -> recall
@@ -38,11 +48,33 @@ class ProviderProfile:
     cost_milli_usd: float = 1.0     # 0.001 USD per request
     dialect: int = 0                # which synonym variant this provider emits
     latency_ms: float = 350.0
+    rev: int = 0                    # bumped by replace(): snapshot version
 
     def recall_for(self, category: str) -> float:
         if category in self.blind:
             return 0.0
         return self.sweet.get(category, self.base_recall)
+
+    def replace(self, **changes) -> "ProviderProfile":
+        """A new snapshot with ``changes`` applied and ``rev`` bumped
+        (unless the caller pins ``rev`` explicitly)."""
+        changes.setdefault("rev", self.rev + 1)
+        return dataclasses.replace(self, **changes)
+
+    def fingerprint(self, *, detection_only: bool = False) -> Tuple:
+        """Hashable identity of this snapshot's behavior.
+
+        ``detection_only=True`` drops the economic fields (cost, latency)
+        and ``rev``, leaving exactly the knobs that shape the provider's
+        detection stream — the cache key for regenerated traces.
+        """
+        fp = (self.name, self.base_recall,
+              tuple(sorted(self.sweet.items())),
+              tuple(sorted(self.blind)), self.box_jitter, self.fp_rate,
+              self.score_mu, self.score_sigma, self.dialect)
+        if detection_only:
+            return fp
+        return fp + (self.cost_milli_usd, self.latency_ms)
 
 
 def default_providers() -> List[ProviderProfile]:

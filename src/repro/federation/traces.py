@@ -15,7 +15,7 @@ Each trace image gets:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -42,6 +42,10 @@ class TraceSet:
     dets: List[List[Detections]]             # word-grouped, canonical labels
     providers: List[ProviderProfile]
     categories: List[str]
+    # per-image per-object difficulty draws (the shared latent that decides
+    # which providers see which objects) — kept so scenario dynamics can
+    # regenerate a single provider's stream without re-rolling the world
+    difficulties: Optional[List[np.ndarray]] = None
 
     def __len__(self) -> int:
         return len(self.gts)
@@ -93,6 +97,57 @@ def _render(boxes: np.ndarray, labels: np.ndarray, palette: np.ndarray,
     return np.clip(img, 0.0, 1.0)
 
 
+def provider_detections(p: ProviderProfile, boxes: np.ndarray,
+                        labs: np.ndarray, difficulty: np.ndarray,
+                        cats: Sequence[str], rng,
+                        grouper: WordGrouper):
+    """One provider's (raw, grouped) detections for one image.
+
+    Consumes ``rng`` in exactly the order of the original trace-generation
+    loop, so ``generate_traces`` keeps its historical stream bit-for-bit;
+    scenario dynamics call it with a per-(provider, image) seeded rng to
+    regenerate a single provider's detections deterministically after a
+    profile change, against the image's stored ``difficulty`` latents.
+    """
+    ncat = len(cats)
+    db, ds, dw = [], [], []
+    for b, lab, diff in zip(boxes, labs, difficulty):
+        cat = cats[lab]
+        if diff < p.recall_for(cat):
+            jit = rng.normal(0.0, p.box_jitter, 4)
+            bb = np.clip(b + jit, 0.0, 1.0)
+            if bb[2] <= bb[0] or bb[3] <= bb[1]:
+                continue
+            db.append(bb)
+            ds.append(np.clip(rng.normal(p.score_mu, p.score_sigma),
+                              0.05, 0.99))
+            dw.append(_dialect_word(cat, p.dialect))
+    for _ in range(rng.poisson(p.fp_rate)):
+        c0 = rng.uniform(0.05, 0.8, 2)
+        wh = rng.uniform(0.05, 0.3, 2)
+        bb = np.array([c0[0], c0[1], min(c0[0] + wh[0], 1.0),
+                       min(c0[1] + wh[1], 1.0)], np.float32)
+        db.append(bb)
+        ds.append(np.clip(rng.normal(0.66, 0.15), 0.05, 0.95))
+        # false positives sometimes use irrelevant words (discarded
+        # by grouping), sometimes a wrong category
+        if rng.random() < 0.25:
+            dw.append(rng.choice(["shadow", "texture", "pattern",
+                                  "background", "blur"]))
+        else:
+            dw.append(_dialect_word(cats[int(rng.integers(ncat))],
+                                    p.dialect))
+    rawd = RawDetections(
+        np.asarray(db, np.float32).reshape(-1, 4),
+        np.asarray(ds, np.float32),
+        dw)
+    # word grouping -> canonical Detections (discard -1)
+    gids = np.asarray(grouper.group_all(rawd.words), np.int32)
+    keep = gids >= 0
+    det = Detections(rawd.boxes[keep], rawd.scores[keep], gids[keep])
+    return rawd, det
+
+
 def generate_traces(providers: Sequence[ProviderProfile], n_images: int, *,
                     seed: int = 0, n_categories: int = 0,
                     mean_objects: float = 2.2) -> TraceSet:
@@ -116,6 +171,7 @@ def generate_traces(providers: Sequence[ProviderProfile], n_images: int, *,
     freq /= freq.sum()
 
     images, gts, raw_all, det_all = [], [], [], []
+    difficulties: List[np.ndarray] = []
     for t in range(n_images):
         n_obj = 1 + min(int(rng.poisson(mean_objects - 1)), 7)
         labs = rng.choice(ncat, size=n_obj, p=freq).astype(np.int32)
@@ -140,47 +196,15 @@ def generate_traces(providers: Sequence[ProviderProfile], n_images: int, *,
         per_provider_raw: List[RawDetections] = []
         per_provider_det: List[Detections] = []
         for p in providers:
-            db, ds, dw = [], [], []
-            for b, lab, diff in zip(boxes, labs, difficulty):
-                cat = cats[lab]
-                if diff < p.recall_for(cat):
-                    jit = rng.normal(0.0, p.box_jitter, 4)
-                    bb = np.clip(b + jit, 0.0, 1.0)
-                    if bb[2] <= bb[0] or bb[3] <= bb[1]:
-                        continue
-                    db.append(bb)
-                    ds.append(np.clip(rng.normal(p.score_mu, p.score_sigma),
-                                      0.05, 0.99))
-                    dw.append(_dialect_word(cat, p.dialect))
-            for _ in range(rng.poisson(p.fp_rate)):
-                c0 = rng.uniform(0.05, 0.8, 2)
-                wh = rng.uniform(0.05, 0.3, 2)
-                bb = np.array([c0[0], c0[1], min(c0[0] + wh[0], 1.0),
-                               min(c0[1] + wh[1], 1.0)], np.float32)
-                db.append(bb)
-                ds.append(np.clip(rng.normal(0.66, 0.15), 0.05, 0.95))
-                # false positives sometimes use irrelevant words (discarded
-                # by grouping), sometimes a wrong category
-                if rng.random() < 0.25:
-                    dw.append(rng.choice(["shadow", "texture", "pattern",
-                                          "background", "blur"]))
-                else:
-                    dw.append(_dialect_word(cats[int(rng.integers(ncat))],
-                                            p.dialect))
-            rawd = RawDetections(
-                np.asarray(db, np.float32).reshape(-1, 4),
-                np.asarray(ds, np.float32),
-                dw)
+            rawd, det = provider_detections(p, boxes, labs, difficulty,
+                                            cats, rng, grouper)
             per_provider_raw.append(rawd)
-            # word grouping -> canonical Detections (discard -1)
-            gids = np.asarray(grouper.group_all(rawd.words), np.int32)
-            keep = gids >= 0
-            per_provider_det.append(Detections(
-                rawd.boxes[keep], rawd.scores[keep], gids[keep]))
+            per_provider_det.append(det)
         images.append(img)
         gts.append(gt)
         raw_all.append(per_provider_raw)
         det_all.append(per_provider_det)
+        difficulties.append(difficulty)
 
     return TraceSet(np.stack(images), gts, raw_all, det_all,
-                    list(providers), list(cats))
+                    list(providers), list(cats), difficulties=difficulties)

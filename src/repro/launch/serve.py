@@ -31,24 +31,41 @@ def run_federation(args) -> int:
     from repro.serving.async_service import AsyncFederationService
     from repro.serving.federation_service import FederationService
 
-    traces = generate_traces(default_providers(), args.images,
-                             seed=args.seed)
-    env = ArmolEnv(traces, mode="gt", beta=0.0, seed=args.seed + 1)
+    pool = None
+    if args.scenario:
+        from repro.scenarios import (DynamicProviderPool,
+                                     NonStationaryArmolEnv, build_scenario)
+        providers = default_providers()
+        schedule = build_scenario(args.scenario, providers,
+                                  horizon=max(args.requests, 2),
+                                  seed=args.seed)
+        print(schedule.describe())
+        pool = DynamicProviderPool(providers, schedule,
+                                   n_images=args.images, seed=args.seed)
+        env = NonStationaryArmolEnv(pool, mode="gt", beta=0.0,
+                                    observe_pool=False, seed=args.seed + 1)
+    else:
+        traces = generate_traces(default_providers(), args.images,
+                                 seed=args.seed)
+        env = ArmolEnv(traces, mode="gt", beta=0.0, seed=args.seed + 1)
     agent = SAC(SACConfig(state_dim=env.state_dim,
                           n_providers=env.n_providers, seed=args.seed))
     rng = np.random.default_rng(args.seed)
     reqs = [int(i) for i in rng.integers(0, args.images, args.requests)]
     mode = "async" if args.use_async else "sync"
     print(f"[serve] federation ({mode}): {env.n_providers} providers, "
-          f"{args.images} images, {args.requests} requests")
+          f"{args.images} images, {args.requests} requests"
+          + (f", scenario={args.scenario}" if args.scenario else ""))
 
     if args.use_async:
         with AsyncFederationService(
                 env, agent, max_batch=args.max_batch,
-                max_wait_ms=args.max_wait_ms,
-                workers=args.workers) as svc:
+                max_wait_ms=args.max_wait_ms, adaptive=args.adaptive,
+                workers=args.workers, pool=pool) as svc:
             svc.handle_many(reqs[:args.max_batch])      # warm jit + shards
             svc.reset_stats()
+            if pool is not None:
+                svc.set_clock(0)    # warm-up must not consume the schedule
             t0 = time.time()
             futures = [svc.submit(i) for i in reqs]
             results = [f.result() for f in futures]
@@ -56,6 +73,9 @@ def run_federation(args) -> int:
             extra = (f" mean_flush={svc.mean_flush_size():.1f}"
                      f" flushes={svc.stats['flushes']}"
                      f" shards={svc.workers}")
+            if pool is not None:
+                extra += (f" segments="
+                          f"{pool.schedule.segment_index(svc.clock) + 1}")
     else:
         svc = FederationService(env, agent)
         svc.handle(reqs[0])                             # warm jit
@@ -97,12 +117,22 @@ def main():
                     help="async: flush when this many requests queue")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="async: flush when the oldest request is this old")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="async: deadline-aware flush sizing from queue "
+                         "depth (deeper queue -> flush sooner)")
     ap.add_argument("--images", type=int, default=120,
                     help="federation: trace-set size")
+    ap.add_argument("--scenario", default="",
+                    help="federation: serve through a non-stationary "
+                         "provider scenario (one schedule step per "
+                         "request; implies --async)")
     args = ap.parse_args()
 
     if args.requests is None:
         args.requests = 400 if args.federation else 8
+    if args.scenario and not args.use_async:
+        # mid-stream pool swaps live in the async service's flush path
+        args.use_async = True
     if args.federation:
         return run_federation(args)
     if not args.arch:

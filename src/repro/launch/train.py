@@ -15,6 +15,14 @@ provider-selection agent through the multi-lane batched drivers
 
   PYTHONPATH=src python -m repro.launch.train --federation --algo sac \
       --epochs 5 --steps 500 --images 400 --lanes 8
+
+``--scenario`` switches to ONLINE adaptation on a non-stationary provider
+pool (``repro.scenarios``): the schedule re-prices, degrades, downs, and
+launches providers mid-stream while training continues, reporting per-
+segment recovery vs the per-segment oracle.
+
+  PYTHONPATH=src python -m repro.launch.train --federation \
+      --scenario provider_outage --horizon 1600 --images 120
 """
 from __future__ import annotations
 
@@ -31,6 +39,40 @@ from repro.models.model import build_model
 from repro.training.train_step import init_train_state, make_train_step
 
 
+def run_scenario(args) -> int:
+    """Online adaptation through a non-stationary provider scenario."""
+    from repro.core.sac import SAC, SACConfig
+    from repro.core.td3 import TD3, TD3Config
+    from repro.federation.providers import default_providers
+    from repro.scenarios import (DynamicProviderPool, NonStationaryArmolEnv,
+                                 build_scenario, run_online)
+
+    if args.algo == "ppo":
+        raise SystemExit("--scenario runs the off-policy online driver; "
+                         "use --algo sac or td3")
+    providers = default_providers()
+    schedule = build_scenario(args.scenario, providers,
+                              horizon=args.horizon, seed=args.seed)
+    print(schedule.describe())
+    pool = DynamicProviderPool(providers, schedule, n_images=args.images,
+                               seed=args.seed)
+    env = NonStationaryArmolEnv(pool, mode=args.mode, beta=args.beta,
+                                observe_pool=not args.blind,
+                                seed=args.seed + 1)
+    kw = dict(state_dim=env.state_dim, n_providers=env.n_providers,
+              lr=3e-4, gamma=0.0, hidden=(32, 32), seed=args.seed)
+    agent = TD3(TD3Config(**kw)) if args.algo == "td3" \
+        else SAC(SACConfig(alpha=0.02, **kw))
+    res = run_online(agent, env, lanes=args.lanes, seed=args.seed)
+    s = res["summary"]
+    print(f"[train] scenario done: min post-switch recovery="
+          f"{s['min_recovery_post_switch']} mean="
+          f"{s['mean_recovery_post_switch']} "
+          f"cache_hit={s['mean_cache_hit_rate']} ({s['steps']} steps, "
+          f"{s['wall_s']}s)")
+    return 0
+
+
 def run_federation(args) -> int:
     from repro.core.loops import run_off_policy, run_ppo
     from repro.core.ppo import PPO, PPOConfig
@@ -40,6 +82,8 @@ def run_federation(args) -> int:
     from repro.federation.providers import default_providers
     from repro.federation.traces import generate_traces
 
+    if args.scenario:
+        return run_scenario(args)
     traces = generate_traces(default_providers(), args.images,
                              seed=args.seed)
     env = ArmolEnv(traces, mode=args.mode, beta=args.beta,
@@ -93,6 +137,16 @@ def main():
     ap.add_argument("--lanes", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=5)
     ap.add_argument("--images", type=int, default=400)
+    ap.add_argument("--scenario", default="",
+                    help="federation: train ONLINE through a non-"
+                         "stationary provider scenario (price_war, "
+                         "provider_outage, accuracy_drift, flash_crowd, "
+                         "provider_churn, random[:seed])")
+    ap.add_argument("--horizon", type=int, default=1600,
+                    help="scenario: schedule length in env steps")
+    ap.add_argument("--blind", action="store_true",
+                    help="scenario: hide provider status/fees from the "
+                         "state (adaptation from reward alone)")
     args = ap.parse_args()
 
     if args.federation:

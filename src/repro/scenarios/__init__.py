@@ -1,0 +1,7 @@
+from repro.scenarios.schedule import (ProviderEvent,  # noqa: F401
+                                      ScenarioSchedule, BUILTIN_SCENARIOS,
+                                      build_scenario, random_scenario)
+from repro.scenarios.pool import DynamicProviderPool, PoolView  # noqa: F401
+from repro.scenarios.env import NonStationaryArmolEnv  # noqa: F401
+from repro.scenarios.online import (evaluate_segment,  # noqa: F401
+                                    run_online)

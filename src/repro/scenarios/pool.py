@@ -1,0 +1,324 @@
+"""DynamicProviderPool: a ScenarioSchedule applied to real trace state.
+
+The pool owns ONE base :class:`TraceSet` over the full roster (base
+providers + every scheduled arrival, so the action space never changes)
+and derives, per schedule segment:
+
+  * the effective :class:`ProviderProfile` snapshots (via the immutable
+    ``replace()`` path — never in-place mutation),
+  * per-provider activity, fee and latency vectors (a down provider
+    yields empty detections, bills nothing, and costs a timeout if
+    selected),
+  * a per-segment :class:`TraceSet` whose detection streams are REUSED
+    from the base traces for providers whose detection-relevant
+    fingerprint is unchanged, regenerated deterministically (seeded per
+    (provider, image, fingerprint) against the stored difficulty latents)
+    for drifted providers, and emptied for inactive ones,
+  * a memoized :class:`SubsetEvaluationCore` per distinct detection
+    fingerprint (``dets_key``).  Price/latency/demand changes share the
+    SAME core — and a regime that reverts to an earlier fingerprint
+    re-hits that fingerprint's warm cache, so steady-state evaluation
+    speed survives regime switches.
+
+Costs are deliberately kept OUT of the cores: segment fee vectors live on
+the :class:`PoolView`, and reward composition (AP50 + beta * cost) happens
+in the non-stationary env / oracle against the view.
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.ensemble.boxes import Detections
+from repro.federation.evaluation import (ShardedSubsetEvaluationCore,
+                                         SubsetEvaluationCore,
+                                         popcount_masks)
+from repro.federation.providers import ProviderProfile
+from repro.federation.traces import (RawDetections, TraceSet,
+                                     generate_traces, provider_detections)
+from repro.federation.vocab import WordGrouper
+from repro.scenarios.schedule import ScenarioSchedule
+
+
+def _fp_crc(fp: Tuple) -> int:
+    """Stable 32-bit hash of a profile fingerprint (hash() is salted per
+    process, which would break cross-run regeneration determinism)."""
+    return zlib.crc32(repr(fp).encode())
+
+
+@dataclass(frozen=True)
+class PoolView:
+    """One segment's effective pool state (everything but detections)."""
+    seg: int
+    profiles: Tuple[ProviderProfile, ...]
+    active: np.ndarray          # (N,) bool
+    costs: np.ndarray           # (N,) float32 — 0 for inactive providers
+    latencies: np.ndarray       # (N,) float64 — timeout for inactive
+    dets_key: Tuple             # detection-content identity of the segment
+    econ_key: Tuple             # dets_key + fees + latencies + demand
+    demand: Optional[Tuple[Tuple[str, ...], float]]
+
+    @property
+    def n_providers(self) -> int:
+        return len(self.profiles)
+
+    @property
+    def active_mask(self) -> int:
+        return int(sum(1 << i for i in np.flatnonzero(self.active)))
+
+    def mask_costs(self, masks: np.ndarray) -> np.ndarray:
+        """(B,) summed fees for an array of subset bitmasks."""
+        m = np.asarray(masks, np.int64).reshape(-1)
+        bits = (m[:, None] >> np.arange(self.n_providers)) & 1
+        return (bits * self.costs).sum(axis=1)
+
+
+class DynamicProviderPool:
+    """Applies a :class:`ScenarioSchedule` to a provider roster.
+
+    Thread-safe for the serving path: lazy segment construction (traces,
+    cores, sharded cores) happens under one lock, lookups after that are
+    plain dict reads.
+    """
+
+    def __init__(self, base_providers: Sequence[ProviderProfile],
+                 schedule: ScenarioSchedule, *, n_images: int = 120,
+                 seed: int = 0, voting: str = "affirmative",
+                 ablation: str = "wbf",
+                 use_kernel: Union[bool, str] = "auto",
+                 outage_timeout_ms: float = 2000.0,
+                 mean_objects: float = 2.2):
+        self.schedule = schedule
+        self.seed = int(seed)
+        self.voting = voting
+        self.ablation = ablation
+        self.use_kernel = use_kernel
+        self.outage_timeout_ms = float(outage_timeout_ms)
+        self.n_base = len(base_providers)
+        self.roster: List[ProviderProfile] = \
+            list(base_providers) + schedule.arrivals()
+        names = [p.name for p in self.roster]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate provider names in roster: {names}")
+        self.base_traces = generate_traces(self.roster, n_images, seed=seed,
+                                           mean_objects=mean_objects)
+        self._base_det_fp = [p.fingerprint(detection_only=True)
+                             for p in self.roster]
+        # per-image category-name sets, for demand reweighting
+        cats = self.base_traces.categories
+        self._img_cats = [frozenset(cats[int(l)] for l in gt.labels)
+                          for gt in self.base_traces.gts]
+        self._grouper = WordGrouper()
+        self._lock = threading.Lock()
+        self._views: Dict[int, PoolView] = {}
+        self._traces: Dict[Tuple, TraceSet] = {}
+        self._cores: Dict[Tuple, SubsetEvaluationCore] = {}
+        self._sharded: Dict[Tuple, ShardedSubsetEvaluationCore] = {}
+        self._oracle: Dict[Tuple, Tuple[int, float]] = {}
+        self.stats = {"segments_built": 0, "cores_built": 0,
+                      "cores_reused": 0, "providers_regenerated": 0}
+
+    @property
+    def n_providers(self) -> int:
+        return len(self.roster)
+
+    def __len__(self) -> int:
+        return len(self.base_traces)
+
+    # -- segment views ---------------------------------------------------
+    def view_at(self, step: int) -> PoolView:
+        seg = self.schedule.segment_index(step)
+        hit = self._views.get(seg)
+        if hit is not None:
+            return hit
+        with self._lock:
+            hit = self._views.get(seg)
+            if hit is None:
+                hit = self._views[seg] = self._build_view(seg)
+        return hit
+
+    def _build_view(self, seg: int) -> PoolView:
+        eff = self.schedule.effects_at(self.schedule.segment_range(seg)[0])
+        price, drift, latency = eff.as_dicts()
+        profiles: List[ProviderProfile] = []
+        active = np.zeros(self.n_providers, bool)
+        for j, base in enumerate(self.roster):
+            changes = {}
+            if base.name in price:
+                changes["cost_milli_usd"] = base.cost_milli_usd * \
+                    price[base.name]
+            if base.name in latency:
+                changes["latency_ms"] = base.latency_ms * latency[base.name]
+            if base.name in drift:
+                s = drift[base.name]
+                changes["base_recall"] = float(
+                    np.clip(base.base_recall * s, 0.0, 1.0))
+                changes["sweet"] = {k: float(np.clip(v * s, 0.0, 1.0))
+                                    for k, v in base.sweet.items()}
+            profiles.append(base.replace(**changes) if changes else base)
+            joined = j < self.n_base or base.name in eff.joined
+            active[j] = joined and base.name not in eff.down
+        costs = np.asarray(
+            [p.cost_milli_usd if active[j] else 0.0
+             for j, p in enumerate(profiles)], np.float32)
+        lats = np.asarray(
+            [p.latency_ms if active[j] else self.outage_timeout_ms
+             for j, p in enumerate(profiles)], np.float64)
+        # inactive slots collapse to one key entry: their detections are
+        # empty no matter what the underlying profile looks like
+        dets_key = tuple(
+            ("on", p.fingerprint(detection_only=True)) if active[j]
+            else ("off",) for j, p in enumerate(profiles))
+        econ_key = (dets_key, tuple(costs.tolist()), tuple(lats.tolist()),
+                    eff.demand)
+        return PoolView(seg, tuple(profiles), active, costs, lats,
+                        dets_key, econ_key, eff.demand)
+
+    # -- segment traces + cores ------------------------------------------
+    def traces_at(self, step: int) -> TraceSet:
+        view = self.view_at(step)
+        hit = self._traces.get(view.dets_key)
+        if hit is not None:
+            return hit
+        with self._lock:
+            hit = self._traces.get(view.dets_key)
+            if hit is None:
+                hit = self._traces[view.dets_key] = \
+                    self._build_traces(view)
+        return hit
+
+    def _build_traces(self, view: PoolView) -> TraceSet:
+        """Segment TraceSet: shared images/GT/difficulties, per-provider
+        detection streams reused, regenerated, or emptied."""
+        base = self.base_traces
+        T = len(base)
+        empty_raw = RawDetections(np.zeros((0, 4), np.float32),
+                                  np.zeros((0,), np.float32), [])
+        raw_all: List[List[RawDetections]] = [[] for _ in range(T)]
+        det_all: List[List[Detections]] = [[] for _ in range(T)]
+        self.stats["segments_built"] += 1
+        for j, p in enumerate(view.profiles):
+            key = view.dets_key[j]
+            if key == ("off",):
+                for t in range(T):
+                    raw_all[t].append(empty_raw)
+                    det_all[t].append(Detections.empty())
+            elif key[1] == self._base_det_fp[j]:
+                for t in range(T):
+                    raw_all[t].append(base.raw[t][j])
+                    det_all[t].append(base.dets[t][j])
+            else:
+                self.stats["providers_regenerated"] += 1
+                crc = _fp_crc(key[1])
+                for t in range(T):
+                    rng = np.random.default_rng((self.seed, j, t, crc))
+                    rawd, det = provider_detections(
+                        p, base.gts[t].boxes, base.gts[t].labels,
+                        base.difficulties[t], base.categories, rng,
+                        self._grouper)
+                    raw_all[t].append(rawd)
+                    det_all[t].append(det)
+        return TraceSet(base.images, base.gts, raw_all, det_all,
+                        list(view.profiles), base.categories,
+                        difficulties=base.difficulties)
+
+    def core_at(self, step: int) -> SubsetEvaluationCore:
+        view = self.view_at(step)
+        hit = self._cores.get(view.dets_key)
+        if hit is not None:
+            self.stats["cores_reused"] += 1
+            return hit
+        traces = self.traces_at(step)
+        with self._lock:
+            hit = self._cores.get(view.dets_key)
+            if hit is None:
+                self.stats["cores_built"] += 1
+                hit = self._cores[view.dets_key] = SubsetEvaluationCore(
+                    traces, voting=self.voting, ablation=self.ablation,
+                    use_kernel=self.use_kernel)
+        return hit
+
+    def sharded_core_at(self, step: int,
+                        n_shards: int) -> ShardedSubsetEvaluationCore:
+        view = self.view_at(step)
+        key = (view.dets_key, int(n_shards))
+        hit = self._sharded.get(key)
+        if hit is not None:
+            return hit
+        traces = self.traces_at(step)
+        with self._lock:
+            hit = self._sharded.get(key)
+            if hit is None:
+                hit = self._sharded[key] = ShardedSubsetEvaluationCore(
+                    traces, n_shards=n_shards, voting=self.voting,
+                    ablation=self.ablation, use_kernel=self.use_kernel)
+        return hit
+
+    # -- demand ----------------------------------------------------------
+    def demand_weights_at(self, step: int,
+                          img_indices: Sequence[int]
+                          ) -> Optional[np.ndarray]:
+        """Normalized sampling weights over ``img_indices`` under the
+        segment's demand focus; None when demand is uniform."""
+        view = self.view_at(step)
+        if view.demand is None:
+            return None
+        cats, boost = view.demand
+        focus = frozenset(cats)
+        w = np.asarray([boost if self._img_cats[int(i)] & focus else 1.0
+                        for i in img_indices], np.float64)
+        return w / w.sum()
+
+    # -- per-segment oracle ----------------------------------------------
+    def oracle(self, img_idx: int, step: int, beta: float, *,
+               against: str = "gt") -> Tuple[int, float]:
+        """(best mask, best reward) for one image under one segment.
+
+        Enumerates the subsets of the segment's ACTIVE providers in
+        popcount order with strict improvement (Algo.-2 tie-breaking:
+        cheaper subsets win ties), rewarding ap50 + beta * segment fees
+        and -1 for an empty ensemble.  Memoized per (segment economics,
+        beta, image); the AP50 lookups ride the segment core's memo.
+        """
+        view = self.view_at(step)
+        key = (view.econ_key, round(float(beta), 12), int(img_idx), against)
+        hit = self._oracle.get(key)
+        if hit is not None:
+            return hit
+        core = self.core_at(step)
+        amask = view.active_mask
+        best_m, best_r = 0, -1.0
+        bit_costs = view.costs.astype(np.float64)
+        for m in popcount_masks(self.n_providers):
+            if m & ~amask:
+                continue
+            if len(core.ensemble(img_idx, m)) == 0:
+                continue
+            c = float(sum(bit_costs[i]
+                          for i in range(self.n_providers) if m >> i & 1))
+            r = core.ap50(img_idx, m, against=against) + beta * c
+            if r > best_r:
+                best_m, best_r = m, r
+        self._oracle[key] = (best_m, best_r)
+        return best_m, best_r
+
+    # -- introspection ---------------------------------------------------
+    def agg_core_stats(self) -> Dict[str, int]:
+        """Summed cache-hit counters over every materialized segment core
+        (the online driver diffs this around each segment)."""
+        agg: Dict[str, int] = {}
+        cores = list(self._cores.values()) + list(self._sharded.values())
+        for c in cores:
+            for k, v in c.stats.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def cache_report(self) -> Dict[str, object]:
+        return {"views": len(self._views), "trace_sets": len(self._traces),
+                "cores": len(self._cores), "sharded": len(self._sharded),
+                "oracle_entries": len(self._oracle),
+                "stats": dict(self.stats)}

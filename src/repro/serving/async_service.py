@@ -50,6 +50,14 @@ class AsyncFederationService:
     max_batch:    flush when this many requests are queued.
     max_wait_ms:  ... or when the oldest queued request is this old.
     workers:      cache shards == single-thread ensemble workers.
+    adaptive:     deadline-aware flush sizing — queue depth scales the
+                  wait budget down (see ``_flush_deadline``).  Off by
+                  default: fixed ``max_batch``/``max_wait_ms`` behavior
+                  is bit-identical to the non-adaptive service.
+    pool:         optional scenario provider pool; the service keeps a
+                  scenario clock (one step per request) and accounts each
+                  flush under the pool's segment at that clock — cores,
+                  fees and latencies swap mid-stream at flush boundaries.
 
     Use as a context manager (or call ``close()``): a dispatcher thread
     and W worker threads run behind the scenes.
@@ -57,7 +65,8 @@ class AsyncFederationService:
 
     def __init__(self, env: ArmolEnv, agent, *, deterministic: bool = True,
                  transmission_ms: float = 20.0, max_batch: int = 16,
-                 max_wait_ms: float = 2.0, workers: int = 2):
+                 max_wait_ms: float = 2.0, workers: int = 2,
+                 adaptive: bool = False, pool=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.env = env
@@ -65,7 +74,18 @@ class AsyncFederationService:
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_ms) / 1e3
         self.workers = int(workers)
-        self.core = ShardedSubsetEvaluationCore.like(env.core, workers)
+        self.adaptive = bool(adaptive)
+        # scenario pool (``repro.scenarios.pool.DynamicProviderPool`` or
+        # anything with view_at/sharded_core_at): each flush is accounted
+        # under the pool state at the service's scenario clock, which
+        # advances one step per request — mid-stream regime swaps apply
+        # at flush boundaries, never inside one
+        self.pool = pool
+        self._scn_clock = 0
+        if pool is not None:
+            self.core = pool.sharded_core_at(0, self.workers)
+        else:
+            self.core = ShardedSubsetEvaluationCore.like(env.core, workers)
         self._svc = FederationService(env, agent,
                                       deterministic=deterministic,
                                       transmission_ms=transmission_ms)
@@ -104,6 +124,21 @@ class AsyncFederationService:
         return [f.result() for f in futs]
 
     # -- dispatcher ------------------------------------------------------
+    def _flush_deadline(self, enqueue_t: float, depth: int) -> float:
+        """When the oldest queued request must flush.
+
+        Fixed mode (default): enqueue time + ``max_wait_ms`` — unchanged
+        seed behavior.  Adaptive mode scales the wait DOWN with queue
+        depth (deadline-aware flush sizing): an empty queue waits the
+        full budget hoping to coalesce, a queue at ``max_batch`` flushes
+        immediately — under load the service stops holding requests
+        hostage to the timer, near idle it still batches aggressively.
+        """
+        if not self.adaptive:
+            return enqueue_t + self.max_wait_s
+        frac = min(depth / self.max_batch, 1.0)
+        return enqueue_t + self.max_wait_s * (1.0 - frac)
+
     def _dispatch_loop(self) -> None:
         while True:
             with self._cv:
@@ -111,8 +146,9 @@ class AsyncFederationService:
                     self._cv.wait()
                 if not self._queue:     # closed and drained
                     return
-                deadline = self._queue[0][1] + self.max_wait_s
                 while len(self._queue) < self.max_batch and not self._closed:
+                    deadline = self._flush_deadline(self._queue[0][1],
+                                                    len(self._queue))
                     remaining = deadline - time.monotonic()
                     if remaining <= 0:
                         break
@@ -120,15 +156,28 @@ class AsyncFederationService:
                 batch = [self._queue.popleft()
                          for _ in range(min(self.max_batch,
                                             len(self._queue)))]
+                clock = self._scn_clock
+                if self.pool is not None:
+                    self._scn_clock += len(batch)
             try:
-                self._flush(batch)
+                self._flush(batch, clock)
             except BaseException as e:   # keep serving after a bad flush
                 for _, _, fut in batch:
                     if not fut.done():
                         fut.set_exception(e)
 
-    def _flush(self, batch) -> None:
+    def _flush(self, batch, clock: int) -> None:
         imgs = np.asarray([b[0] for b in batch], np.int64)
+        costs = lats = None
+        core = self.core
+        if self.pool is not None:
+            # one consistent (core, fee/latency) snapshot per flush:
+            # in-flight assembly keeps its captured segment even if the
+            # clock crosses a boundary while it overlaps the next flush
+            view = self.pool.view_at(clock)
+            core = self.pool.sharded_core_at(clock, self.workers)
+            costs, lats = view.costs, view.latencies
+            self.core = core
         if len(batch) == 1:
             # same single-state act path as FederationService.handle, so
             # max_batch=1 is result-identical to the synchronous service
@@ -160,8 +209,9 @@ class AsyncFederationService:
         # assembly overlaps the next flush's agent forward
         for sid, positions in self._partition(imgs).items():
             self._shard_pools[sid].submit(
-                self._account_shard, sid,
-                [batch[p] for p in positions], actions[positions])
+                self._account_shard, core, sid,
+                [batch[p] for p in positions], actions[positions],
+                costs, lats)
 
     def _partition(self, imgs: np.ndarray):
         groups: dict = {}
@@ -169,14 +219,17 @@ class AsyncFederationService:
             groups.setdefault(self.core.shard_id(img), []).append(pos)
         return groups
 
-    def _account_shard(self, sid: int, items, actions: np.ndarray) -> None:
+    def _account_shard(self, core, sid: int, items, actions: np.ndarray,
+                       costs, lats) -> None:
         """Runs on shard ``sid``'s dedicated thread — the only thread that
-        ever touches that shard's dicts."""
+        ever touches that shard's dicts (for the flush's captured core)."""
         try:
-            shard = self.core.shards[sid]
+            shard = core.shards[sid]
             imgs = [it[0] for it in items]
             shard.precompute(imgs)      # one batched IoU launch per shard
-            results = self._svc._account_batch(imgs, actions, core=shard)
+            results = self._svc._account_batch(imgs, actions, core=shard,
+                                               costs=costs,
+                                               latency_ms=lats)
             for (_, _, fut), res in zip(items, results):
                 fut.set_result(res)
         except BaseException as e:
@@ -204,6 +257,19 @@ class AsyncFederationService:
 
     def mean_flush_size(self) -> float:
         return self.stats["requests"] / max(self.stats["flushes"], 1)
+
+    # -- scenario clock --------------------------------------------------
+    @property
+    def clock(self) -> int:
+        with self._cv:
+            return self._scn_clock
+
+    def set_clock(self, step: int) -> None:
+        """Jump the scenario clock (e.g. to force a regime for tests or
+        to sync with an external scheduler).  Takes effect at the next
+        flush boundary; flushes already dispatched keep their snapshot."""
+        with self._cv:
+            self._scn_clock = int(step)
 
     def reset_stats(self) -> None:
         """Zero the flush counters (e.g. after warm-up traffic), so

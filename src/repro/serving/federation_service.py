@@ -22,7 +22,7 @@ concurrent clients.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -51,7 +51,9 @@ class FederationService:
             np.int64(1), np.arange(env.n_providers, dtype=np.int64))
 
     def _account_batch(self, imgs: Sequence[int], actions: np.ndarray,
-                       *, core=None) -> List[FederationResult]:
+                       *, core=None, costs: Optional[np.ndarray] = None,
+                       latency_ms: Optional[np.ndarray] = None
+                       ) -> List[FederationResult]:
         """Vectorized ensemble + cost/latency bookkeeping for one flush.
 
         One numpy pass computes every request's subset mask, summed fee,
@@ -59,17 +61,23 @@ class FederationService:
         inference is parallel -> max latency, paper Sec. II-B); only the
         memoized ensemble lookups remain per-request.  ``core`` defaults
         to the env's shared cache — the async service passes the request's
-        home shard instead.
+        home shard instead.  ``costs`` / ``latency_ms`` override the
+        static per-provider fee/latency vectors for one flush; a scenario
+        pool swap passes the current segment's vectors (a down provider
+        bills 0 and, if selected, costs its timeout latency).
         """
         core = self.env.core if core is None else core
+        costs = self.env.costs if costs is None else \
+            np.asarray(costs, np.float32)
+        lat_v = self.provider_latency_ms if latency_ms is None else \
+            np.asarray(latency_ms, np.float64)
         acts = np.asarray(actions, np.float32).reshape(
             len(imgs), self.env.n_providers)
         sel = acts > 0.5
         n_sel = sel.sum(axis=1)
         masks = (sel * self._mask_weights).sum(axis=1)
-        cost = np.where(sel, self.env.costs, np.float32(0.0)).sum(axis=1)
-        inf_lat = np.max(np.where(sel, self.provider_latency_ms, -np.inf),
-                         axis=1)
+        cost = np.where(sel, costs, np.float32(0.0)).sum(axis=1)
+        inf_lat = np.max(np.where(sel, lat_v, -np.inf), axis=1)
         latency = np.where(n_sel > 0,
                            self.transmission_ms * n_sel + inf_lat, 0.0)
         out = []

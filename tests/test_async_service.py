@@ -164,6 +164,49 @@ def test_submit_after_close_raises():
     asvc.close()        # idempotent
 
 
+def test_adaptive_default_off_keeps_fixed_deadline():
+    """Parity guard for the default: with ``adaptive=False`` (the
+    default) the flush deadline is EXACTLY the seed behavior — enqueue
+    time + max_wait, independent of queue depth."""
+    asvc = AsyncFederationService(ENV, FixedAgent([1, 0, 0]), max_batch=8,
+                                  max_wait_ms=10.0, workers=1)
+    try:
+        assert asvc.adaptive is False
+        t0 = 100.0
+        want = t0 + asvc.max_wait_s
+        for depth in (0, 1, 4, 7, 8, 100):
+            assert asvc._flush_deadline(t0, depth) == want
+    finally:
+        asvc.close()
+
+
+def test_adaptive_deadline_shrinks_with_depth():
+    asvc = AsyncFederationService(ENV, FixedAgent([1, 0, 0]), max_batch=8,
+                                  max_wait_ms=10.0, workers=1,
+                                  adaptive=True)
+    try:
+        t0 = 100.0
+        d = [asvc._flush_deadline(t0, k) for k in range(9)]
+        assert all(a >= b for a, b in zip(d, d[1:]))     # monotone down
+        assert d[0] == t0 + asvc.max_wait_s              # idle: full wait
+        assert d[8] == t0                                # full: flush now
+        assert asvc._flush_deadline(t0, 100) == t0       # clamps
+    finally:
+        asvc.close()
+
+
+def test_adaptive_service_results_match_sync_reference():
+    agent = FixedAgent([1, 1, 0])
+    svc = FederationService(ENV, agent)
+    imgs = [int(i) for i in
+            np.random.default_rng(7).integers(0, len(TR), 50)]
+    with AsyncFederationService(ENV, agent, max_batch=8, workers=2,
+                                max_wait_ms=5.0, adaptive=True) as asvc:
+        got = asvc.handle_many(imgs)
+    for img, res in zip(imgs, got):
+        _assert_results_equal(res, svc.handle(img))
+
+
 def test_queued_requests_drain_on_close():
     """close() must flush requests already queued, not drop them."""
     asvc = AsyncFederationService(ENV, FixedAgent([1, 1, 0]),

@@ -1,0 +1,283 @@
+"""Scenario engine: schedule semantics, dynamic provider pool state,
+segment-keyed evaluation caches, and the non-stationary env wrapper."""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.federation.evaluation import SubsetEvaluationCore
+from repro.federation.providers import ProviderProfile, default_providers
+from repro.federation.traces import generate_traces
+from repro.scenarios import (BUILTIN_SCENARIOS, DynamicProviderPool,
+                             NonStationaryArmolEnv, build_scenario,
+                             random_scenario)
+from repro.scenarios.schedule import ProviderEvent, ScenarioSchedule
+
+PROVS = default_providers()
+
+
+# ---------------------------------------------------------------------------
+# provider snapshots (the replace()/fingerprint path)
+# ---------------------------------------------------------------------------
+
+def test_provider_profile_is_frozen():
+    p = PROVS[0]
+    with pytest.raises(Exception):
+        p.cost_milli_usd = 99.0
+
+
+def test_replace_bumps_rev_and_keeps_base():
+    p = PROVS[0]
+    q = p.replace(cost_milli_usd=2.0)
+    assert q.rev == p.rev + 1
+    assert q.cost_milli_usd == 2.0
+    assert p.cost_milli_usd == 1.0
+    assert q.name == p.name
+
+
+def test_fingerprint_separates_economics_from_detections():
+    p = PROVS[0]
+    repriced = p.replace(cost_milli_usd=3.0)
+    drifted = p.replace(base_recall=p.base_recall * 0.5)
+    assert p.fingerprint() != repriced.fingerprint()
+    assert p.fingerprint(detection_only=True) == \
+        repriced.fingerprint(detection_only=True)
+    assert p.fingerprint(detection_only=True) != \
+        drifted.fingerprint(detection_only=True)
+
+
+# ---------------------------------------------------------------------------
+# schedule semantics
+# ---------------------------------------------------------------------------
+
+def test_segment_index_and_ranges():
+    sch = ScenarioSchedule("t", 100, [ProviderEvent(30, "price", "aws", 2.0),
+                                      ProviderEvent(60, "outage", "aws")])
+    assert sch.boundaries == [0, 30, 60]
+    assert sch.segment_index(0) == 0
+    assert sch.segment_index(29) == 0
+    assert sch.segment_index(30) == 1
+    assert sch.segment_index(99) == 2
+    assert sch.segment_index(5000) == 2        # clamps past horizon
+    assert sch.segment_range(1) == (30, 60)
+    assert sch.segment_range(2) == (60, 100)
+
+
+def test_latest_event_wins_and_recovery_toggles():
+    sch = ScenarioSchedule("t", 100, [
+        ProviderEvent(10, "price", "aws", 0.5),
+        ProviderEvent(20, "price", "aws", 2.0),
+        ProviderEvent(30, "outage", "azure"),
+        ProviderEvent(40, "recovery", "azure")])
+    assert dict(sch.effects_at(15).price) == {"aws": 0.5}
+    assert dict(sch.effects_at(25).price) == {"aws": 2.0}
+    assert "azure" in sch.effects_at(35).down
+    assert "azure" not in sch.effects_at(45).down
+
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        ProviderEvent(5, "explode", "aws")
+    with pytest.raises(ValueError):
+        ProviderEvent(5, "arrival", "x")       # arrival needs a profile
+    with pytest.raises(ValueError):
+        ScenarioSchedule("t", 10, [ProviderEvent(10, "price", "a", 1.0)])
+
+
+def test_builtins_build_and_random_is_seeded():
+    for name in BUILTIN_SCENARIOS:
+        sch = build_scenario(name, PROVS, horizon=500)
+        assert sch.horizon == 500 and sch.n_segments >= 2
+        assert sch.describe()
+    r1 = random_scenario(PROVS, horizon=500, seed=7)
+    r2 = random_scenario(PROVS, horizon=500, seed=7)
+    assert [(e.step, e.kind, e.provider, e.value) for e in r1.events] == \
+        [(e.step, e.kind, e.provider, e.value) for e in r2.events]
+    assert build_scenario("random:7", PROVS, horizon=500).events == r1.events
+    with pytest.raises(ValueError):
+        build_scenario("nope", PROVS)
+
+
+# ---------------------------------------------------------------------------
+# dynamic pool
+# ---------------------------------------------------------------------------
+
+def _pool(name="provider_outage", horizon=300, n=24, **kw):
+    sch = build_scenario(name, PROVS, horizon=horizon)
+    return DynamicProviderPool(PROVS, sch, n_images=n, seed=0, **kw)
+
+
+def test_base_segment_reuses_base_traces_exactly():
+    pool = _pool()
+    tr0 = pool.traces_at(0)
+    for t in range(5):
+        for j in range(pool.n_providers):
+            assert tr0.dets[t][j] is pool.base_traces.dets[t][j]
+
+
+def test_outage_masks_detections_and_zeroes_fees():
+    pool = _pool()
+    victim = int(np.argmax([p.base_recall for p in PROVS]))
+    mid = pool.view_at(150)                    # inside the outage window
+    assert not mid.active[victim]
+    assert mid.costs[victim] == 0.0
+    assert mid.latencies[victim] == pool.outage_timeout_ms
+    tr = pool.traces_at(150)
+    assert all(len(tr.dets[t][victim]) == 0 for t in range(len(pool)))
+    # untouched providers keep their base streams (shared objects)
+    other = (victim + 1) % pool.n_providers
+    assert tr.dets[0][other] is pool.base_traces.dets[0][other]
+
+
+def test_recurring_regime_shares_one_core():
+    pool = _pool()                             # outage recovers at 2h/3
+    assert pool.core_at(0) is pool.core_at(299)
+    assert pool.core_at(0) is not pool.core_at(150)
+
+
+def test_price_change_shares_detection_core():
+    pool = _pool("price_war")
+    c0, c1 = pool.core_at(0), pool.core_at(100)    # aws at 0.25x fee
+    assert c0 is c1                            # economics-only: same core
+    v = pool.view_at(100)
+    assert v.costs[0] == pytest.approx(0.25)
+    assert v.econ_key != pool.view_at(0).econ_key
+
+
+def test_drift_regenerates_only_the_drifted_provider():
+    pool = _pool("accuracy_drift")
+    tr = pool.traces_at(pool.schedule.horizon // 4)    # aws drift 0.7
+    base = pool.base_traces
+    assert any(not np.array_equal(tr.dets[t][0].boxes, base.dets[t][0].boxes)
+               for t in range(len(pool)))
+    # drift is monotone against the shared difficulty latents: scaled-down
+    # recall can only lose true positives, never invent them
+    google = 2
+    for t in range(len(pool)):
+        assert tr.dets[t][google] is base.dets[t][google]
+    # deterministic: rebuilding the same regime gives identical arrays
+    pool2 = _pool("accuracy_drift")
+    tr2 = pool2.traces_at(pool.schedule.horizon // 4)
+    for t in range(len(pool)):
+        np.testing.assert_array_equal(tr.dets[t][0].boxes,
+                                      tr2.dets[t][0].boxes)
+
+
+def test_arrival_expands_roster_with_static_action_space():
+    pool = _pool("provider_churn")
+    assert pool.n_providers == len(PROVS) + 1
+    v0 = pool.view_at(0)
+    assert not v0.active[-1] and v0.costs[-1] == 0.0
+    vend = pool.view_at(pool.schedule.horizon - 1)
+    assert vend.active[-1] and vend.costs[-1] > 0
+    # the challenger's detections exist in the roster traces and surface
+    # once it arrives
+    tr = pool.traces_at(pool.schedule.horizon - 1)
+    assert sum(len(tr.dets[t][-1]) for t in range(len(pool))) > 0
+
+
+def test_demand_weights():
+    pool = _pool("flash_crowd")
+    h = pool.schedule.horizon
+    assert pool.demand_weights_at(0, range(len(pool))) is None
+    w = pool.demand_weights_at(h // 2, range(len(pool)))
+    assert w is not None and w.sum() == pytest.approx(1.0)
+    focus = {"bottle", "cup", "dining table"}
+    hit = [bool(pool._img_cats[i] & focus) for i in range(len(pool))]
+    if any(hit) and not all(hit):
+        assert w[hit.index(True)] > w[hit.index(False)]
+
+
+def test_oracle_restricts_to_active_and_breaks_ties_cheap():
+    pool = _pool()
+    victim = int(np.argmax([p.base_recall for p in PROVS]))
+    for img in range(3):
+        m, r = pool.oracle(img, 150, -0.05)
+        assert not (m >> victim) & 1           # never picks the dead one
+        m2, r2 = pool.oracle(img, 150, -0.05)  # memo hit
+        assert (m2, r2) == (m, r)
+
+
+# ---------------------------------------------------------------------------
+# non-stationary env
+# ---------------------------------------------------------------------------
+
+def test_env_clock_and_segment_costs():
+    pool = _pool("price_war", horizon=120, n=24)
+    env = NonStationaryArmolEnv(pool, mode="gt", beta=-0.1,
+                                observe_pool=False, seed=0)
+    a = np.asarray([1, 0, 0], np.float32)      # aws only
+    img = int(env.train_idx[0])
+    r0, v0, c0 = env.evaluate_action(img, a)
+    assert c0 == pytest.approx(1.0)
+    env.set_clock(40)                          # aws at 0.25x
+    r1, v1, c1 = env.evaluate_action(img, a)
+    assert c1 == pytest.approx(0.25)
+    assert v1 == v0                            # detections unchanged
+    assert r1 == pytest.approx(v0 - 0.1 * 0.25)
+
+
+def test_env_matches_static_env_on_empty_schedule():
+    sch = ScenarioSchedule("static", 50, [])
+    pool = DynamicProviderPool(PROVS, sch, n_images=24, seed=3)
+    env_d = NonStationaryArmolEnv(pool, mode="gt", beta=-0.05,
+                                  observe_pool=False, seed=5)
+    from repro.federation.env import ArmolEnv
+    env_s = ArmolEnv(pool.base_traces, mode="gt", beta=-0.05, seed=5)
+    assert env_d.state_dim == env_s.state_dim
+    acts = np.asarray([[1, 1, 0], [0, 1, 1], [1, 1, 1]], np.float32)
+    imgs = [int(i) for i in env_s.train_idx[:3]]
+    out_d = env_d.evaluate_actions(imgs, acts)
+    out_s = env_s.evaluate_actions(imgs, acts)
+    for k in ("reward", "ap50", "cost"):
+        np.testing.assert_array_equal(out_d[k], out_s[k])
+
+
+def test_step_lanes_advances_clock_and_flags_switch():
+    pool = _pool("provider_outage", horizon=60, n=24)
+    env = NonStationaryArmolEnv(pool, mode="gt", beta=0.0,
+                                observe_pool=True, seed=0)
+    env.reset_lanes(2)
+    switches = 0
+    for _ in range(30):
+        a = np.ones((2, env.n_providers), np.float32)
+        _, _, _, infos, _ = env.step_lanes(a)
+        switches += bool(infos["switched"])
+    assert env.clock == 60
+    assert switches == pool.schedule.n_segments - 1
+
+
+def test_observe_pool_status_features_track_segments():
+    pool = _pool("provider_outage", horizon=60, n=24)
+    env = NonStationaryArmolEnv(pool, mode="gt", beta=0.0,
+                                observe_pool=True, seed=0)
+    n = env.n_providers
+    assert env.state_dim == env._base_dim + 2 * n
+    victim = int(np.argmax([p.base_recall for p in PROVS]))
+    active_col = env._base_dim + victim
+    assert env.features[0, active_col] == 1.0
+    env.set_clock(30)                          # outage window (h/3..2h/3)
+    assert env.features[0, active_col] == 0.0
+    # features_at never disturbs the live matrix
+    f0 = env.features_at(0, [0])
+    assert f0[0, active_col] == 1.0
+    assert env.features[0, active_col] == 0.0
+
+
+def test_empty_subset_of_down_providers_is_minus_one():
+    pool = _pool("provider_outage", horizon=300, n=24)
+    env = NonStationaryArmolEnv(pool, mode="gt", beta=0.0,
+                                observe_pool=False, seed=0)
+    victim = int(np.argmax([p.base_recall for p in PROVS]))
+    a = np.zeros(env.n_providers, np.float32)
+    a[victim] = 1.0
+    out = env.evaluate_actions_at(env.train_idx[:4], np.tile(a, (4, 1)),
+                                  150)
+    np.testing.assert_array_equal(out["reward"], -1.0)
+    np.testing.assert_array_equal(out["cost"], 0.0)
+
+
+def test_invalid_pool_duplicate_names():
+    sch = ScenarioSchedule("t", 10, [])
+    with pytest.raises(ValueError):
+        DynamicProviderPool(PROVS + [PROVS[0]], sch, n_images=4)

@@ -1,0 +1,109 @@
+"""Online-adaptation driver: segment evaluation/oracle/regret accounting
+and an end-to-end (slow) recovery smoke through a real regime switch."""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core.sac import SAC, SACConfig
+from repro.federation.providers import default_providers
+from repro.scenarios import (DynamicProviderPool, NonStationaryArmolEnv,
+                             build_scenario, evaluate_segment, run_online)
+from repro.scenarios.schedule import ProviderEvent, ScenarioSchedule
+
+PROVS = default_providers()
+
+
+class FixedAgent:
+    """Constant-subset agent (batch-polymorphic like the real heads)."""
+
+    def __init__(self, action):
+        self.action = np.asarray(action, np.float32)
+        self.state = None
+
+    def select_action(self, s, *, deterministic=False):
+        s = np.asarray(s)
+        if s.ndim == 2:
+            return np.tile(self.action, (len(s), 1)), None
+        return self.action.copy(), None
+
+
+def _env(name="provider_outage", horizon=300, n=24, **kw):
+    sch = build_scenario(name, PROVS, horizon=horizon)
+    pool = DynamicProviderPool(PROVS, sch, n_images=n, seed=0)
+    kw.setdefault("observe_pool", False)
+    return NonStationaryArmolEnv(pool, mode="gt", beta=-0.05, seed=1, **kw)
+
+
+def test_evaluate_segment_reward_matches_manual():
+    env = _env()
+    agent = FixedAgent([0, 1, 1])
+    rec = evaluate_segment(agent, env, 150)
+    imgs = env.test_idx
+    out = env.evaluate_actions_at(imgs, np.tile(agent.action,
+                                                (len(imgs), 1)), 150)
+    assert rec["reward"] == pytest.approx(float(np.mean(out["reward"])),
+                                          abs=1e-4)
+    orc = np.mean([env.pool.oracle(int(i), 150, env.beta)[1]
+                   for i in imgs])
+    assert rec["oracle_reward"] == pytest.approx(float(orc), abs=1e-4)
+    assert rec["recovery"] == pytest.approx(rec["reward"] / orc, abs=1e-3)
+    assert rec["regret"] == pytest.approx(
+        rec["oracle_reward"] - rec["reward"], abs=1e-3)
+
+
+def test_oracle_dominates_any_policy_per_segment():
+    env = _env("accuracy_drift")
+    for action in ([1, 1, 1], [0, 1, 1], [1, 0, 0]):
+        rec = evaluate_segment(FixedAgent(action), env, 200)
+        assert rec["reward"] <= rec["oracle_reward"] + 1e-9
+        # recovery may be negative for a terrible policy, never > 1
+        assert rec["recovery"] <= 1.0 + 1e-9
+
+
+def test_oracle_beats_full_ensemble_under_fee_pressure():
+    env = _env("price_war")
+    rec = evaluate_segment(FixedAgent([1, 1, 1]), env, 10)
+    assert rec["oracle_reward"] > rec["reward"]
+
+
+@pytest.mark.slow
+def test_run_online_end_to_end_recovers_through_outage():
+    sch = build_scenario("provider_outage", PROVS, horizon=900)
+    pool = DynamicProviderPool(PROVS, sch, n_images=60, seed=0)
+    env = NonStationaryArmolEnv(pool, mode="gt", beta=-0.03,
+                                observe_pool=True, seed=1)
+    agent = SAC(SACConfig(state_dim=env.state_dim,
+                          n_providers=env.n_providers, alpha=0.02,
+                          lr=3e-4, gamma=0.0, hidden=(32, 32)))
+    res = run_online(agent, env, lanes=4, seed=0, log=None)
+    segs, summary = res["segments"], res["summary"]
+    assert len(segs) == sch.n_segments
+    assert summary["steps"] >= sch.horizon
+    assert [s["seg"] for s in segs] == list(range(sch.n_segments))
+    # the driver must keep a meaningful fraction of oracle reward after
+    # every switch (the benchmark gates >= 0.8 at full budget; the test
+    # budget is a third of that, so assert a conservative floor)
+    assert summary["min_recovery_post_switch"] >= 0.6
+    for s in segs:
+        assert 0.0 <= s["cache_hit_rate"] <= 1.0
+        assert s["oracle_reward"] >= s["reward"] - 1e-9
+    # regime memory: outage recovery returns to the base dets regime, so
+    # only two trace sets / cores exist over four segments
+    assert summary["pool"]["cores"] == 2
+
+
+@pytest.mark.slow
+def test_run_online_relabel_keeps_buffer_on_price_only_switch():
+    sch = ScenarioSchedule("p", 240, [ProviderEvent(120, "price", "aws",
+                                                    3.0)])
+    pool = DynamicProviderPool(PROVS, sch, n_images=24, seed=0)
+    env = NonStationaryArmolEnv(pool, mode="gt", beta=-0.1,
+                                observe_pool=True, seed=1)
+    agent = SAC(SACConfig(state_dim=env.state_dim,
+                          n_providers=env.n_providers, gamma=0.0,
+                          hidden=(16, 16)))
+    res = run_online(agent, env, lanes=2, seed=0, log=None,
+                     start_steps=40, explore_steps=20, batch_size=32)
+    assert res["summary"]["pool"]["cores"] == 1    # one detection regime
+    assert len(res["segments"]) == 2

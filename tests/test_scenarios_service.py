@@ -1,0 +1,114 @@
+"""AsyncFederationService under a scenario pool: mid-stream regime swaps
+with exact vectorized accounting, and the request-driven scenario clock."""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.federation.providers import default_providers
+from repro.scenarios import (DynamicProviderPool, NonStationaryArmolEnv,
+                             build_scenario)
+from repro.scenarios.schedule import ProviderEvent, ScenarioSchedule
+from repro.serving.async_service import AsyncFederationService
+
+PROVS = default_providers()
+
+
+class FixedAgent:
+    def __init__(self, action):
+        self.action = np.asarray(action, np.float32)
+
+    def select_action(self, s, *, deterministic=False):
+        s = np.asarray(s)
+        if s.ndim == 2:
+            return np.tile(self.action, (len(s), 1)), None
+        return self.action.copy(), None
+
+
+def _pool_env(name="provider_outage", horizon=300, n=24):
+    sch = build_scenario(name, PROVS, horizon=horizon)
+    pool = DynamicProviderPool(PROVS, sch, n_images=n, seed=0)
+    env = NonStationaryArmolEnv(pool, mode="gt", beta=0.0,
+                                observe_pool=False, seed=1)
+    return pool, env
+
+
+def test_swap_changes_costs_latency_and_detections():
+    pool, env = _pool_env()
+    victim = int(np.argmax([p.base_recall for p in PROVS]))
+    agent = FixedAgent(np.ones(env.n_providers))
+    with AsyncFederationService(env, agent, max_batch=4, workers=2,
+                                pool=pool) as svc:
+        r_base = svc.handle(3)
+        svc.set_clock(150)                     # inside the outage
+        r_out = svc.handle(3)
+        svc.set_clock(pool.schedule.horizon - 1)
+        r_back = svc.handle(3)
+    n_up = env.n_providers - 1
+    assert r_base.cost_milli_usd == pytest.approx(
+        float(sum(p.cost_milli_usd for p in PROVS)))
+    assert r_out.cost_milli_usd == pytest.approx(
+        float(sum(p.cost_milli_usd for i, p in enumerate(PROVS)
+                  if i != victim)))
+    # selecting the dead provider costs its timeout in the latency model
+    view = pool.view_at(150)
+    want_lat = (svc._svc.transmission_ms * env.n_providers
+                + float(np.max(view.latencies)))
+    assert r_out.latency_ms == pytest.approx(want_lat)
+    assert pool.outage_timeout_ms == float(np.max(view.latencies))
+    # recovered regime serves the base-regime answer again, exactly
+    np.testing.assert_array_equal(r_base.detections.boxes,
+                                  r_back.detections.boxes)
+    assert r_back.cost_milli_usd == r_base.cost_milli_usd
+    assert n_up == env.n_providers - 1
+
+
+def test_request_clock_advances_one_step_per_request():
+    pool, env = _pool_env(horizon=64, n=24)
+    agent = FixedAgent([0, 1, 1])
+    with AsyncFederationService(env, agent, max_batch=4, workers=2,
+                                pool=pool) as svc:
+        svc.handle_many(list(range(10)))
+        assert svc.clock == 10
+        svc.handle(0)
+        assert svc.clock == 11
+
+
+def test_swap_matches_synchronous_segment_accounting():
+    """Every result under the scenario service equals the synchronous
+    per-segment accounting of the same (image, action) at the same
+    scenario step."""
+    sch = ScenarioSchedule("p", 40, [ProviderEvent(20, "price", "aws",
+                                                   4.0)])
+    pool = DynamicProviderPool(PROVS, sch, n_images=24, seed=0)
+    env = NonStationaryArmolEnv(pool, mode="gt", beta=0.0,
+                                observe_pool=False, seed=1)
+    agent = FixedAgent([1, 0, 1])
+    imgs = [int(i) for i in
+            np.random.default_rng(0).integers(0, 24, 40)]
+    with AsyncFederationService(env, agent, max_batch=1, workers=1,
+                                pool=pool) as svc:
+        got = [svc.handle(i) for i in imgs]    # clock == request index
+    for step, (img, res) in enumerate(zip(imgs, got)):
+        view = pool.view_at(step)
+        core = pool.core_at(step)
+        sel = res.action > 0.5
+        want_cost = float(np.sum(view.costs[sel]))
+        assert res.cost_milli_usd == pytest.approx(want_cost)
+        ref = core.ensemble(img, core.mask_of(res.action))
+        np.testing.assert_array_equal(res.detections.boxes, ref.boxes)
+    # fees doubled across the boundary for the aws-including subset
+    assert got[0].cost_milli_usd == pytest.approx(2.0)
+    assert got[-1].cost_milli_usd == pytest.approx(5.0)
+
+
+def test_no_pool_service_is_unchanged():
+    """Without a pool the service never consults a scenario clock and the
+    sharded core is built from the env core as before."""
+    pool, env = _pool_env()
+    agent = FixedAgent([0, 1, 0])
+    with AsyncFederationService(env, agent, max_batch=2,
+                                workers=2) as svc:
+        r = svc.handle(5)
+        assert svc.clock == 0
+    assert r.cost_milli_usd == pytest.approx(float(PROVS[1].cost_milli_usd))

@@ -1,0 +1,77 @@
+"""Property tests: ShardedSubsetEvaluationCore must agree with the
+unsharded core under random shard counts and interleaved per-image
+invalidations, and its partition invariants must survive them."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+pytest.importorskip("jax")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.federation.evaluation import (  # noqa: E402
+    ShardedSubsetEvaluationCore, SubsetEvaluationCore)
+from repro.federation.providers import default_providers  # noqa: E402
+from repro.federation.traces import generate_traces  # noqa: E402
+
+TR = generate_traces(default_providers(), 20, seed=9)
+N = TR.n_providers
+ALL_MASKS = list(range(1, 1 << N))
+
+# op stream: ("ap", img, mask) | ("ens", img, mask) | ("inv", [imgs])
+_op = st.one_of(
+    st.tuples(st.just("ap"), st.integers(0, len(TR) - 1),
+              st.sampled_from(ALL_MASKS)),
+    st.tuples(st.just("ens"), st.integers(0, len(TR) - 1),
+              st.sampled_from(ALL_MASKS)),
+    st.tuples(st.just("inv"),
+              st.lists(st.integers(0, len(TR) - 1), min_size=1,
+                       max_size=6)),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_shards=st.integers(1, 6), ops=st.lists(_op, min_size=1,
+                                                max_size=40))
+def test_sharded_matches_unsharded_under_invalidations(n_shards, ops):
+    ref = SubsetEvaluationCore(TR)
+    cut = ShardedSubsetEvaluationCore(TR, n_shards=n_shards)
+    for op in ops:
+        if op[0] == "inv":
+            dropped_ref = ref.invalidate_images(op[1])
+            dropped_cut = cut.invalidate_images(op[1])
+            assert dropped_ref == dropped_cut
+        elif op[0] == "ap":
+            assert cut.ap50(op[1], op[2]) == ref.ap50(op[1], op[2])
+        else:
+            a, b = cut.ensemble(op[1], op[2]), ref.ensemble(op[1], op[2])
+            np.testing.assert_array_equal(a.boxes, b.boxes)
+            np.testing.assert_array_equal(a.scores, b.scores)
+            np.testing.assert_array_equal(a.labels, b.labels)
+        # partition invariants hold after every op: entries only in their
+        # home shard, no duplicates, aggregate == reference cache
+        shard_imgs = cut.shard_images()
+        flat = [i for imgs in shard_imgs for i in imgs]
+        assert len(flat) == len(set(flat))
+        for sid, imgs in enumerate(shard_imgs):
+            assert all(i % n_shards == sid for i in imgs)
+        assert sorted(flat) == ref.cached_images()
+    assert cut.cache_sizes() == ref.cache_sizes()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_shards=st.integers(1, 5),
+       imgs=st.lists(st.integers(0, len(TR) - 1), min_size=1, max_size=12),
+       drop=st.lists(st.integers(0, len(TR) - 1), min_size=1, max_size=12))
+def test_invalidate_then_recompute_is_identical(n_shards, imgs, drop):
+    """Invalidation must be loss-free: recomputed answers equal the
+    pre-invalidation answers bit for bit."""
+    core = ShardedSubsetEvaluationCore(TR, n_shards=n_shards)
+    mask = (1 << N) - 1
+    before = {i: core.ap50(i, mask) for i in imgs}
+    core.invalidate_images(drop)
+    for i in imgs:
+        assert core.ap50(i, mask) == before[i]
+    # a second invalidation of already-dropped images is a no-op
+    core.invalidate_images(drop)
+    for i in imgs:
+        assert core.ap50(i, mask) == before[i]

@@ -64,12 +64,19 @@ GATES = {
     "serving": [Gate("speedup_async_vs_handle"),
                 Gate("speedup_many_vs_handle")],
     "train_driver": [Gate("offpolicy.speedup"), Gate("ppo.speedup")],
+    # scenario gates are quality ratios, not timings: post-switch
+    # recovery vs the per-segment oracle and the warm-path cache hit
+    # rate the stream saw — both machine-speed invariant
+    "scenarios": [Gate("summary.min_recovery"),
+                  Gate("summary.mean_cache_hit_rate")],
 }
 
 BENCH_ENV = {
     "subset_cache": {"REPRO_BENCH_IMAGES": "50"},
     "serving": {"REPRO_BENCH_IMAGES": "50"},
     "train_driver": {"REPRO_BENCH_IMAGES": "120"},
+    "scenarios": {"REPRO_BENCH_IMAGES": "120",
+                  "REPRO_BENCH_HORIZON": "1600"},
 }
 
 DEFAULT = ["subset_cache", "serving"]

@@ -5,10 +5,10 @@
 #                        (-m "not slow"), subset-cache smoke benchmark
 #   tools/ci.sh --full   everything: slow driver tests + the benchmark
 #                        regression gates (tools/check_bench.py compares
-#                        fresh subset_cache/serving/train_driver numbers
-#                        against the committed benchmarks/results/*.json
-#                        baselines; REPRO_BENCH_TOLERANCE overrides the
-#                        30% gate on noisy runners)
+#                        fresh subset_cache/serving/train_driver/scenarios
+#                        numbers against the committed benchmarks/
+#                        results/*.json baselines; REPRO_BENCH_TOLERANCE
+#                        overrides the 30% gate on noisy runners)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -39,9 +39,23 @@ for mod in ("hypothesis", "jax"):
         skip = re.search(rf"importorskip\(\s*['\"]{mod}['\"]\s*\)", src)
         if skip is None or skip.start() > imp.start():
             bad.append(f"{path} ({mod})")
+# scenario tests import repro.* (which pulls jax transitively) and run
+# training drivers: each file must guard jax explicitly and mark its
+# driver tests slow so the tier-1 lane stays fast
+scen = sorted(pathlib.Path("tests").glob("test_scenarios*.py"))
+if not scen:
+    bad.append("tests/test_scenarios*.py (missing)")
+for path in scen:
+    src = path.read_text()
+    if 'importorskip("jax")' not in src and \
+            "importorskip('jax')" not in src:
+        bad.append(f"{path} (no jax importorskip)")
+    if "run_online" in src and "pytest.mark.slow" not in src:
+        bad.append(f"{path} (online-driver test without a slow marker)")
 if bad:
     sys.exit("optional dependency imported without a preceding "
-             "pytest.importorskip guard: " + ", ".join(bad))
+             "pytest.importorskip guard (or scenario-test hygiene "
+             "violation): " + ", ".join(bad))
 print("ok")
 PY
 
@@ -55,7 +69,7 @@ fi
 
 if [[ "$FULL" == 1 ]]; then
     echo "== benchmark regression gates (fresh vs committed baselines) =="
-    python tools/check_bench.py subset_cache serving train_driver
+    python tools/check_bench.py subset_cache serving train_driver scenarios
 else
     echo "== subset-cache smoke benchmark (50 images) =="
     # scratch results dir: the committed baselines under benchmarks/
