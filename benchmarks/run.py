@@ -595,6 +595,225 @@ def bench_serving():
 
 
 # ---------------------------------------------------------------------------
+# Serving shards: thread vs process backend capacity at W in {1, 2, 4}
+# ---------------------------------------------------------------------------
+
+def bench_serving_mp():
+    """Saturated-drain capacity of ``AsyncFederationService`` with thread
+    vs process shard backends at W in {1, 2, 4}.
+
+    The request stream is one permutation of DISTINCT images per round,
+    with the shard caches invalidated between rounds: every request pays
+    the real production cost of a never-seen image (IoU table build +
+    ensemble assembly), which is exactly the work the GIL serializes on
+    the thread backend and worker processes parallelize.  jit shapes and
+    worker processes stay warm across rounds — this measures steady-state
+    serving capacity, not spawn or compile cost.  7 providers (the
+    Tab.-III scalability roster) keep per-request assembly realistic.
+
+    At each W the thread and process services are alive TOGETHER and
+    their drain rounds interleave (thread, process, thread, ...), so a
+    load spike on a shared machine hits both backends, not one; each
+    config keeps its best of ``REPRO_BENCH_ROUNDS`` rounds and the
+    regression gate compares process/thread RATIOS at equal W, which
+    cancel absolute machine speed.
+    """
+    from repro.core.sac import SAC, SACConfig
+    from repro.federation.env import ArmolEnv
+    from repro.federation.providers import scalability_providers
+    from repro.federation.traces import generate_traces
+    from repro.serving.async_service import AsyncFederationService
+
+    n_prov = 7
+    n_images = min(IMAGES, 240)
+    max_batch = int(os.environ.get("REPRO_BENCH_MAX_BATCH", "16"))
+    rounds = int(os.environ.get("REPRO_BENCH_ROUNDS", "5"))
+    widths = (1, 2, 4)
+
+    traces = generate_traces(scalability_providers()[:n_prov], n_images,
+                             seed=0)
+    env = ArmolEnv(traces, mode="gt", beta=0.0, seed=1)
+    agent = SAC(SACConfig(state_dim=env.state_dim,
+                          n_providers=env.n_providers, hidden=(32, 32)))
+    reqs = [int(i) for i in
+            np.random.default_rng(0).permutation(n_images)]
+
+    def drain(svc) -> float:
+        # cold caches, warm everything else: each request re-pays table
+        # build + assembly, never jit or spawn
+        svc.core.invalidate_images(reqs)
+        svc.reset_stats()
+        t0 = time.time()
+        futs = [svc.submit(i) for i in reqs]
+        for f in futs:
+            f.result()
+        return len(reqs) / (time.time() - t0)
+
+    out = {"n_providers": n_prov, "n_images": n_images,
+           "max_batch": max_batch, "rounds": rounds,
+           "backends": {"thread": {}, "process": {}}}
+    for w in widths:
+        svcs = {}
+        try:
+            for backend in ("thread", "process"):
+                svc = AsyncFederationService(
+                    env, agent, max_batch=max_batch, max_wait_ms=2.0,
+                    workers=w, shard_backend=backend)
+                svc.handle(reqs[0])          # single-request jit shape
+                svc.handle_many(reqs)        # batched jit shape + warm run
+                svcs[backend] = svc
+            best = {"thread": 0.0, "process": 0.0}
+            for _ in range(rounds):
+                for backend, svc in svcs.items():
+                    best[backend] = max(best[backend], drain(svc))
+            for backend, svc in svcs.items():
+                out["backends"][backend][f"w{w}"] = {
+                    "rps": round(best[backend], 1),
+                    "mean_flush": round(svc.mean_flush_size(), 1)}
+        finally:
+            for svc in svcs.values():
+                svc.close()
+    for w in widths:
+        t = out["backends"]["thread"][f"w{w}"]["rps"]
+        p = out["backends"]["process"][f"w{w}"]["rps"]
+        out[f"speedup_process_vs_thread_w{w}"] = round(p / max(t, 1e-9), 2)
+    _save("serving_mp", out)
+    for backend in ("thread", "process"):
+        for w in widths:
+            r = out["backends"][backend][f"w{w}"]
+            _emit(f"serving_mp/{backend}_w{w}", 1e6 / max(r["rps"], 1e-9),
+                  f"rps={r['rps']};mean_flush={r['mean_flush']}")
+    for w in widths:
+        _emit(f"serving_mp/speedup_w{w}", 0.0,
+              f"process_vs_thread={out[f'speedup_process_vs_thread_w{w}']}x")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving scenarios: latency / cost SLOs per regime under provider dynamics
+# ---------------------------------------------------------------------------
+
+def bench_serving_scenarios():
+    """Poisson open-loop client through non-stationary provider schedules
+    on the process-backend serving plane, recording per-regime SLOs.
+
+    One scenario step per request: the serving clock walks the schedule,
+    segments swap at flush boundaries, and every request is accounted
+    under its segment's fee/latency vectors (a down provider bills 0 and
+    costs its outage timeout if the selector still picks it).  Per
+    segment we report p50/p99 of the MODELED request latency and the
+    mean cost per request — both machine-speed-invariant (they follow
+    from the paper's latency/fee model, not the wall clock), which is
+    what the regression gate checks.  Wall-clock throughput is reported
+    as context, never gated.
+
+    Requests are attributed to segments by arrival index; flush
+    boundaries can skew attribution by up to max_batch requests, which
+    blurs only the handful of requests at each switch.
+    """
+    from repro.core.sac import SAC, SACConfig
+    from repro.federation.providers import default_providers
+    from repro.scenarios import (DynamicProviderPool, NonStationaryArmolEnv,
+                                 build_scenario)
+    from repro.serving.async_service import AsyncFederationService
+
+    names = [s for s in os.environ.get(
+        "REPRO_BENCH_SERVE_SCENARIOS", "provider_outage,price_war"
+        ).split(",") if s]
+    n_reqs = int(os.environ.get("REPRO_BENCH_REQUESTS", "600"))
+    n_images = min(IMAGES, 120)
+    max_batch = int(os.environ.get("REPRO_BENCH_MAX_BATCH", "16"))
+    workers = int(os.environ.get("REPRO_BENCH_WORKERS", "4"))
+    backend = os.environ.get("REPRO_BENCH_SHARD_BACKEND", "process")
+    lambda_x = float(os.environ.get("REPRO_BENCH_LAMBDA_X", "4.0"))
+
+    providers = default_providers()
+    out = {"config": {"requests": n_reqs, "n_images": n_images,
+                      "max_batch": max_batch, "workers": workers,
+                      "shard_backend": backend, "scenarios": names}}
+    for name in names:
+        schedule = build_scenario(name, providers, horizon=n_reqs)
+        pool = DynamicProviderPool(providers, schedule, n_images=n_images,
+                                   seed=0)
+        env = NonStationaryArmolEnv(pool, mode="gt", beta=0.0,
+                                    observe_pool=False, seed=1)
+        agent = SAC(SACConfig(state_dim=env.state_dim,
+                              n_providers=env.n_providers, hidden=(32, 32)))
+        rng = np.random.default_rng(0)
+        reqs = [int(i) for i in rng.integers(0, n_images, n_reqs)]
+        with AsyncFederationService(env, agent, max_batch=max_batch,
+                                    max_wait_ms=2.0, workers=workers,
+                                    pool=pool, shard_backend=backend) as svc:
+            svc.handle(reqs[0])
+            svc.handle_many(list(range(n_images)))   # warm shards + jit
+            svc.reset_stats()
+            svc.set_clock(0)    # warm-up must not consume the schedule
+            # offered load: a quick warm drain calibrates capacity, the
+            # client then offers lambda_x times that (saturation)
+            t0 = time.time()
+            for f in [svc.submit(i) for i in reqs[:100]]:
+                f.result()
+            cap = 100 / (time.time() - t0)
+            svc.reset_stats()
+            svc.set_clock(0)
+            arrivals = rng.exponential(1.0 / (lambda_x * cap),
+                                       n_reqs).cumsum()
+            base = time.monotonic()
+            futures = []
+            for i, img in enumerate(reqs):
+                delay = base + arrivals[i] - time.monotonic()
+                if delay > 2e-3:
+                    time.sleep(delay)
+                futures.append(svc.submit(img))
+            results = [f.result() for f in futures]
+            wall_s = time.monotonic() - base
+            stats = dict(svc.stats)
+            # aggregated over every regime core on every shard: for the
+            # process backend this is where segment activity actually
+            # lives (the pool's parent-side cache_report stays ~empty)
+            shard_stats = dict(svc.core.stats)
+            shard_sizes = svc.core.cache_sizes()
+        lat = np.asarray([r.latency_ms for r in results])
+        cost = np.asarray([r.cost_milli_usd for r in results])
+        segs = np.asarray([schedule.segment_index(i)
+                           for i in range(n_reqs)])
+        seg_rows = []
+        for s in sorted(set(segs.tolist())):
+            m = segs == s
+            view = pool.view_at(int(schedule.segment_range(s)[0]))
+            seg_rows.append({
+                "seg": int(s), "requests": int(m.sum()),
+                "down": [p.name for j, p in enumerate(view.profiles)
+                         if not view.active[j]],
+                "p50_ms": round(float(np.percentile(lat[m], 50)), 1),
+                "p99_ms": round(float(np.percentile(lat[m], 99)), 1),
+                "cost_per_request": round(float(cost[m].mean()), 4)})
+        row = {
+            "segments": seg_rows,
+            "worst_p99_ms": round(max(r["p99_ms"] for r in seg_rows), 1),
+            "cost_per_request": round(float(cost.mean()), 4),
+            "wall_rps": round(n_reqs / wall_s, 1),
+            "mean_flush": round(stats["requests"]
+                                / max(stats["flushes"], 1), 1),
+            "flush_reasons": {k: stats[k] for k in
+                              ("flush_full", "flush_timeout",
+                               "flush_drain")},
+            "shard_cache_sizes": shard_sizes,
+            "shard_ens_hit_rate": round(
+                shard_stats.get("ens_hits", 0)
+                / max(shard_stats.get("ens_hits", 0)
+                      + shard_stats.get("ens_misses", 0), 1), 4),
+            "pool_cache": pool.cache_report()}
+        out[name] = row
+        _emit(f"serving_scenarios/{name}", 1e6 * wall_s / n_reqs,
+              f"worst_p99={row['worst_p99_ms']}ms;"
+              f"cost_per_req={row['cost_per_request']};"
+              f"rps={row['wall_rps']};segments={len(seg_rows)}")
+    _save("serving_scenarios", out)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Scenario suite: online adaptation under non-stationary provider pools
 # ---------------------------------------------------------------------------
 
@@ -725,6 +944,8 @@ BENCHES = {
     "subset_cache": bench_subset_cache,
     "train_driver": bench_train_driver,
     "serving": bench_serving,
+    "serving_mp": bench_serving_mp,
+    "serving_scenarios": bench_serving_scenarios,
     "scenarios": bench_scenarios,
     "kernels": bench_kernels,
 }

@@ -263,6 +263,38 @@ class SubsetEvaluationCore:
                 self.mask_of(a)
         return {"reward": reward, "ap50": ap, "cost": cost, "mask": masks}
 
+    def ensemble_rows(self, img_indices: Sequence[int],
+                      masks: Sequence[int]) -> List[Tuple[np.ndarray, ...]]:
+        """Wire contract of the serving shards: (boxes, scores, labels,
+        providers) array tuples for each (image, mask) pair, tables
+        precomputed in one batch first.  A worker process sends exactly
+        these rows back over its pipe; the parent rewraps them with
+        ``Detections.fast`` — raw arrays, because ``Detections`` validation
+        and object overhead have no place on the IPC hot path."""
+        imgs = [int(i) for i in img_indices]
+        self.precompute([i for i, m in zip(imgs, masks) if int(m)])
+        rows = []
+        for img, m in zip(imgs, masks):
+            ens = self.ensemble(img, int(m))
+            rows.append((ens.boxes, ens.scores, ens.labels, ens.providers))
+        return rows
+
+    def __getstate__(self):
+        """Pickle = configuration + traces, never the memo caches: a core
+        crossing a process boundary arrives cold and shared-nothing (the
+        caches are derivable, per-process, and would dwarf the payload).
+        The serving shards ship TraceSets + snapshot recipes rather than
+        whole cores, so this is the safety net for ANY future transport
+        (and for user code) — not a path the process plane relies on."""
+        state = dict(self.__dict__)
+        state["_tables"] = {}
+        state["_masks"] = {}
+        state["_ens"] = {}
+        state["_ap"] = {}
+        state["_cost"] = {}
+        state["stats"] = {k: 0 for k in self.stats}
+        return state
+
     def ensemble_batch(self, img_indices: Sequence[int],
                        actions: np.ndarray) -> List[Detections]:
         imgs = [int(i) for i in img_indices]

@@ -52,7 +52,7 @@ def run_federation(args) -> int:
                           n_providers=env.n_providers, seed=args.seed))
     rng = np.random.default_rng(args.seed)
     reqs = [int(i) for i in rng.integers(0, args.images, args.requests)]
-    mode = "async" if args.use_async else "sync"
+    mode = (f"async/{args.shard_backend}" if args.use_async else "sync")
     print(f"[serve] federation ({mode}): {env.n_providers} providers, "
           f"{args.images} images, {args.requests} requests"
           + (f", scenario={args.scenario}" if args.scenario else ""))
@@ -61,7 +61,8 @@ def run_federation(args) -> int:
         with AsyncFederationService(
                 env, agent, max_batch=args.max_batch,
                 max_wait_ms=args.max_wait_ms, adaptive=args.adaptive,
-                workers=args.workers, pool=pool) as svc:
+                workers=args.workers, pool=pool,
+                shard_backend=args.shard_backend) as svc:
             svc.handle_many(reqs[:args.max_batch])      # warm jit + shards
             svc.reset_stats()
             if pool is not None:
@@ -113,6 +114,12 @@ def main():
                     help="micro-batching AsyncFederationService")
     ap.add_argument("--workers", type=int, default=4,
                     help="async: cache shards / ensemble worker threads")
+    ap.add_argument("--shard-backend", default="thread",
+                    choices=("thread", "process"),
+                    help="async: shard workers as in-process threads "
+                         "(zero IPC, GIL-bound assembly) or one worker "
+                         "process per shard (parallel assembly; results "
+                         "are bit-identical)")
     ap.add_argument("--max-batch", type=int, default=16,
                     help="async: flush when this many requests queue")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,

@@ -1,7 +1,9 @@
 from repro.scenarios.schedule import (ProviderEvent,  # noqa: F401
                                       ScenarioSchedule, BUILTIN_SCENARIOS,
                                       build_scenario, random_scenario)
-from repro.scenarios.pool import DynamicProviderPool, PoolView  # noqa: F401
+from repro.scenarios.pool import (DynamicProviderPool,  # noqa: F401
+                                  PoolSnapshot, PoolView,
+                                  build_segment_traces)
 from repro.scenarios.env import NonStationaryArmolEnv  # noqa: F401
 from repro.scenarios.online import (evaluate_segment,  # noqa: F401
                                     run_online)

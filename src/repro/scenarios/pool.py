@@ -50,6 +50,75 @@ def _fp_crc(fp: Tuple) -> int:
     return zlib.crc32(repr(fp).encode())
 
 
+def build_segment_traces(base: TraceSet,
+                         profiles: Sequence[ProviderProfile],
+                         dets_key: Tuple, seed: int,
+                         grouper: WordGrouper, *,
+                         base_det_fp: Optional[Sequence[Tuple]] = None,
+                         stats: Optional[Dict[str, int]] = None) -> TraceSet:
+    """Segment TraceSet: shared images/GT/difficulties, per-provider
+    detection streams reused, regenerated, or emptied.
+
+    Module-level (not a pool method) on purpose: the multi-process serving
+    shards rebuild segment traces INSIDE worker processes from a shipped
+    :class:`PoolSnapshot`, and regeneration must be bit-identical to the
+    parent pool's — one function, one rng recipe
+    (``(seed, provider, image, crc(fingerprint))``), both callers.
+    """
+    if base_det_fp is None:
+        base_det_fp = [p.fingerprint(detection_only=True)
+                       for p in base.providers]
+    T = len(base)
+    empty_raw = RawDetections(np.zeros((0, 4), np.float32),
+                              np.zeros((0,), np.float32), [])
+    raw_all: List[List[RawDetections]] = [[] for _ in range(T)]
+    det_all: List[List[Detections]] = [[] for _ in range(T)]
+    if stats is not None:
+        stats["segments_built"] += 1
+    for j, p in enumerate(profiles):
+        key = dets_key[j]
+        if key == ("off",):
+            for t in range(T):
+                raw_all[t].append(empty_raw)
+                det_all[t].append(Detections.empty())
+        elif key[1] == base_det_fp[j]:
+            for t in range(T):
+                raw_all[t].append(base.raw[t][j])
+                det_all[t].append(base.dets[t][j])
+        else:
+            if stats is not None:
+                stats["providers_regenerated"] += 1
+            crc = _fp_crc(key[1])
+            for t in range(T):
+                rng = np.random.default_rng((seed, j, t, crc))
+                rawd, det = provider_detections(
+                    p, base.gts[t].boxes, base.gts[t].labels,
+                    base.difficulties[t], base.categories, rng,
+                    grouper)
+                raw_all[t].append(rawd)
+                det_all[t].append(det)
+    return TraceSet(base.images, base.gts, raw_all, det_all,
+                    list(profiles), base.categories,
+                    difficulties=base.difficulties)
+
+
+@dataclass(frozen=True)
+class PoolSnapshot:
+    """Picklable recipe for one segment's evaluation state.
+
+    Everything a shared-nothing worker process (which already holds the
+    pool's BASE traces) needs to materialize the segment: the effective
+    profiles, the detection-content key that decides reuse/regenerate/
+    empty per provider, and the pool seed for deterministic regeneration.
+    Fees/latencies stay out — accounting happens in the parent against
+    the :class:`PoolView`, workers only ensemble detections.
+    """
+    seg: int
+    dets_key: Tuple
+    profiles: Tuple[ProviderProfile, ...]
+    seed: int
+
+
 @dataclass(frozen=True)
 class PoolView:
     """One segment's effective pool state (everything but detections)."""
@@ -118,6 +187,7 @@ class DynamicProviderPool:
         self._traces: Dict[Tuple, TraceSet] = {}
         self._cores: Dict[Tuple, SubsetEvaluationCore] = {}
         self._sharded: Dict[Tuple, ShardedSubsetEvaluationCore] = {}
+        self._snapshots: Dict[int, PoolSnapshot] = {}
         self._oracle: Dict[Tuple, Tuple[int, float]] = {}
         self.stats = {"segments_built": 0, "cores_built": 0,
                       "cores_reused": 0, "providers_regenerated": 0}
@@ -192,39 +262,22 @@ class DynamicProviderPool:
         return hit
 
     def _build_traces(self, view: PoolView) -> TraceSet:
-        """Segment TraceSet: shared images/GT/difficulties, per-provider
-        detection streams reused, regenerated, or emptied."""
-        base = self.base_traces
-        T = len(base)
-        empty_raw = RawDetections(np.zeros((0, 4), np.float32),
-                                  np.zeros((0,), np.float32), [])
-        raw_all: List[List[RawDetections]] = [[] for _ in range(T)]
-        det_all: List[List[Detections]] = [[] for _ in range(T)]
-        self.stats["segments_built"] += 1
-        for j, p in enumerate(view.profiles):
-            key = view.dets_key[j]
-            if key == ("off",):
-                for t in range(T):
-                    raw_all[t].append(empty_raw)
-                    det_all[t].append(Detections.empty())
-            elif key[1] == self._base_det_fp[j]:
-                for t in range(T):
-                    raw_all[t].append(base.raw[t][j])
-                    det_all[t].append(base.dets[t][j])
-            else:
-                self.stats["providers_regenerated"] += 1
-                crc = _fp_crc(key[1])
-                for t in range(T):
-                    rng = np.random.default_rng((self.seed, j, t, crc))
-                    rawd, det = provider_detections(
-                        p, base.gts[t].boxes, base.gts[t].labels,
-                        base.difficulties[t], base.categories, rng,
-                        self._grouper)
-                    raw_all[t].append(rawd)
-                    det_all[t].append(det)
-        return TraceSet(base.images, base.gts, raw_all, det_all,
-                        list(view.profiles), base.categories,
-                        difficulties=base.difficulties)
+        return build_segment_traces(self.base_traces, view.profiles,
+                                    view.dets_key, self.seed,
+                                    self._grouper,
+                                    base_det_fp=self._base_det_fp,
+                                    stats=self.stats)
+
+    def snapshot_at(self, step: int) -> PoolSnapshot:
+        """Picklable segment recipe for worker processes (memoized per
+        segment).  A worker holding ``base_traces`` rebuilds the segment
+        via :func:`build_segment_traces` bit-identically to this pool."""
+        view = self.view_at(step)
+        hit = self._snapshots.get(view.seg)
+        if hit is None:
+            hit = self._snapshots[view.seg] = PoolSnapshot(
+                view.seg, view.dets_key, view.profiles, self.seed)
+        return hit
 
     def core_at(self, step: int) -> SubsetEvaluationCore:
         view = self.view_at(step)
@@ -305,6 +358,29 @@ class DynamicProviderPool:
                 best_m, best_r = m, r
         self._oracle[key] = (best_m, best_r)
         return best_m, best_r
+
+    # -- invalidation ----------------------------------------------------
+    def invalidate_images(self, img_indices: Sequence[int]) -> int:
+        """Drop the images' cached artifacts from EVERY materialized
+        segment core (plain and sharded) and every oracle entry touching
+        them — the thread-backend counterpart of the process workers'
+        all-regime fan-out: a trace mutation must not leave stale
+        ensembles behind in a segment the clock later revisits.  Returns
+        the number of tables dropped across all cores.
+
+        Worker PROCESSES hold their own per-regime caches this sweep
+        cannot reach: a process-backend service must be invalidated
+        through ``AsyncFederationService.invalidate_images``, which
+        bridges both sides."""
+        drop = {int(i) for i in img_indices}
+        with self._lock:
+            cores = list(self._cores.values()) + list(self._sharded.values())
+            for k in [k for k in self._oracle if k[2] in drop]:
+                del self._oracle[k]
+        dropped = 0
+        for c in cores:
+            dropped += c.invalidate_images(drop)
+        return dropped
 
     # -- introspection ---------------------------------------------------
     def agg_core_stats(self) -> Dict[str, int]:

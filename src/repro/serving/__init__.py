@@ -2,3 +2,5 @@ from repro.serving.engine import ServeEngine, Request  # noqa: F401
 from repro.serving.federation_service import (  # noqa: F401
     FederationResult, FederationService)
 from repro.serving.async_service import AsyncFederationService  # noqa: F401
+from repro.serving.mp_shards import (  # noqa: F401
+    ProcessShardedSubsetEvaluationCore, ShardWorkerError)

@@ -12,10 +12,17 @@ turns the service into an open system:
     whole point: the per-call jit dispatch overhead is amortized over the
     flush) and one batched IoU precompute per touched shard.
   * **sharded caches** — the subset-evaluation memo is split across W
-    shared-nothing shards by ``img_idx % W``
-    (``ShardedSubsetEvaluationCore``).  Each shard is owned by its own
-    single-thread executor, so concurrent flushes never contend on one
-    dict and no locks guard the hot lookup path.
+    shared-nothing shards by ``img_idx % W``.  With the default
+    ``shard_backend="thread"`` (``ShardedSubsetEvaluationCore``) each
+    shard is owned by its own single-thread executor, so concurrent
+    flushes never contend on one dict and no locks guard the hot lookup
+    path — but ensemble assembly still serializes on the GIL.
+    ``shard_backend="process"`` promotes the shards to worker processes
+    (``ProcessShardedSubsetEvaluationCore``): same routing rule, same
+    merge order, bit-identical results, with assembly running on real
+    cores.  Accounting stays in the parent either way
+    (``FederationService._route_batch``); only ensemble rows cross the
+    process boundary.
   * **overlap** — the dispatcher hands each shard's slice of the flush to
     that shard's worker and immediately returns to batching: provider
     fan-out/ensemble assembly (the thread pool over the vectorized
@@ -49,7 +56,13 @@ class AsyncFederationService:
     ----------
     max_batch:    flush when this many requests are queued.
     max_wait_ms:  ... or when the oldest queued request is this old.
-    workers:      cache shards == single-thread ensemble workers.
+    workers:      cache shards == ensemble workers (threads or processes).
+    shard_backend: ``"thread"`` (default — in-process shards, zero IPC)
+                  or ``"process"`` (one worker process per shard, off the
+                  GIL; results are bit-identical to the thread backend).
+    mp_context:   multiprocessing start method for the process backend
+                  (``"spawn"`` default — the parent runs jax, whose
+                  runtime threads do not survive ``fork``).
     adaptive:     deadline-aware flush sizing — queue depth scales the
                   wait budget down (see ``_flush_deadline``).  Off by
                   default: fixed ``max_batch``/``max_wait_ms`` behavior
@@ -66,23 +79,41 @@ class AsyncFederationService:
     def __init__(self, env: ArmolEnv, agent, *, deterministic: bool = True,
                  transmission_ms: float = 20.0, max_batch: int = 16,
                  max_wait_ms: float = 2.0, workers: int = 2,
-                 adaptive: bool = False, pool=None):
+                 adaptive: bool = False, pool=None,
+                 shard_backend: str = "thread",
+                 mp_context: str = "spawn"):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if shard_backend not in ("thread", "process"):
+            raise ValueError(f"shard_backend must be 'thread' or "
+                             f"'process', got {shard_backend!r}")
         self.env = env
         self.agent = agent
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_ms) / 1e3
         self.workers = int(workers)
         self.adaptive = bool(adaptive)
+        self.shard_backend = shard_backend
         # scenario pool (``repro.scenarios.pool.DynamicProviderPool`` or
-        # anything with view_at/sharded_core_at): each flush is accounted
-        # under the pool state at the service's scenario clock, which
-        # advances one step per request — mid-stream regime swaps apply
-        # at flush boundaries, never inside one
+        # anything with view_at/sharded_core_at/snapshot_at): each flush
+        # is accounted under the pool state at the service's scenario
+        # clock, which advances one step per request — mid-stream regime
+        # swaps apply at flush boundaries, never inside one.  The thread
+        # backend swaps the whole sharded core; the process backend keeps
+        # ONE worker pool for the service's lifetime and ships each
+        # segment across the boundary as a PoolSnapshot recipe.
         self.pool = pool
         self._scn_clock = 0
-        if pool is not None:
+        if shard_backend == "process":
+            from repro.serving.mp_shards import \
+                ProcessShardedSubsetEvaluationCore
+            if pool is not None:
+                self.core = ProcessShardedSubsetEvaluationCore.for_pool(
+                    pool, self.workers, mp_context=mp_context)
+            else:
+                self.core = ProcessShardedSubsetEvaluationCore.like(
+                    env.core, self.workers, mp_context=mp_context)
+        elif pool is not None:
             self.core = pool.sharded_core_at(0, self.workers)
         else:
             self.core = ShardedSubsetEvaluationCore.like(env.core, workers)
@@ -95,8 +126,13 @@ class AsyncFederationService:
         self._cv = threading.Condition()
         self._queue: deque = deque()    # (img_idx, enqueue_t, future)
         self._closed = False
+        # flush_full/flush_timeout/flush_drain: WHY each flush fired —
+        # queue hit max_batch, the oldest request's deadline expired, or
+        # close() drained the queue.  Tests assert on these instead of
+        # wall-clock sleeps (timer behavior without timing flakiness).
         self.stats = {"requests": 0, "flushes": 0, "batched_requests": 0,
-                      "max_flush": 0}
+                      "max_flush": 0, "flush_full": 0, "flush_timeout": 0,
+                      "flush_drain": 0}
         self._shard_pools = [
             ThreadPoolExecutor(max_workers=1,
                                thread_name_prefix=f"fed-shard-{i}")
@@ -153,6 +189,14 @@ class AsyncFederationService:
                     if remaining <= 0:
                         break
                     self._cv.wait(timeout=remaining)
+                # why this flush fired — decided while the queue state is
+                # still visible, counted with the other stats in _flush
+                if len(self._queue) >= self.max_batch:
+                    reason = "flush_full"
+                elif self._closed:
+                    reason = "flush_drain"
+                else:
+                    reason = "flush_timeout"
                 batch = [self._queue.popleft()
                          for _ in range(min(self.max_batch,
                                             len(self._queue)))]
@@ -160,24 +204,30 @@ class AsyncFederationService:
                 if self.pool is not None:
                     self._scn_clock += len(batch)
             try:
-                self._flush(batch, clock)
+                self._flush(batch, clock, reason)
             except BaseException as e:   # keep serving after a bad flush
                 for _, _, fut in batch:
                     if not fut.done():
                         fut.set_exception(e)
 
-    def _flush(self, batch, clock: int) -> None:
+    def _flush(self, batch, clock: int, reason: str = "flush_full") -> None:
         imgs = np.asarray([b[0] for b in batch], np.int64)
         costs = lats = None
+        snapshot = None
         core = self.core
         if self.pool is not None:
             # one consistent (core, fee/latency) snapshot per flush:
             # in-flight assembly keeps its captured segment even if the
             # clock crosses a boundary while it overlaps the next flush
             view = self.pool.view_at(clock)
-            core = self.pool.sharded_core_at(clock, self.workers)
             costs, lats = view.costs, view.latencies
-            self.core = core
+            if self.shard_backend == "process":
+                # the worker pool persists across segments; the segment
+                # itself rides along with each shard request as a recipe
+                snapshot = self.pool.snapshot_at(clock)
+            else:
+                core = self.pool.sharded_core_at(clock, self.workers)
+                self.core = core
         if len(batch) == 1:
             # same single-state act path as FederationService.handle, so
             # max_batch=1 is result-identical to the synchronous service
@@ -200,6 +250,7 @@ class AsyncFederationService:
                                  np.float32)[:len(batch)]
         with self._cv:      # counters race with reset_stats() otherwise
             self.stats["flushes"] += 1
+            self.stats[reason] += 1
             self.stats["requests"] += len(batch)
             if len(batch) > 1:
                 self.stats["batched_requests"] += len(batch)
@@ -207,11 +258,22 @@ class AsyncFederationService:
                                           len(batch))
         # fan out by home shard; the dispatcher does NOT wait — ensemble
         # assembly overlaps the next flush's agent forward
-        for sid, positions in self._partition(imgs).items():
-            self._shard_pools[sid].submit(
-                self._account_shard, core, sid,
-                [batch[p] for p in positions], actions[positions],
-                costs, lats)
+        if self.shard_backend == "process":
+            # routing/accounting math stays in the parent (one vectorized
+            # pass); only (image, mask) rows cross the process boundary
+            acts, n_sel, masks, cost, lat = self._svc._route_batch(
+                imgs, actions, costs=costs, latency_ms=lats)
+            for sid, positions in self._partition(imgs).items():
+                self._shard_pools[sid].submit(
+                    self._account_shard_mp, core, sid,
+                    [batch[p] for p in positions], positions, snapshot,
+                    acts, n_sel, masks, cost, lat)
+        else:
+            for sid, positions in self._partition(imgs).items():
+                self._shard_pools[sid].submit(
+                    self._account_shard, core, sid,
+                    [batch[p] for p in positions], actions[positions],
+                    costs, lats)
 
     def _partition(self, imgs: np.ndarray):
         groups: dict = {}
@@ -237,6 +299,46 @@ class AsyncFederationService:
                 if not fut.done():
                     fut.set_exception(e)
 
+    def _account_shard_mp(self, core, sid: int, items, positions,
+                          snapshot, acts, n_sel, masks, cost,
+                          lat) -> None:
+        """Process-backend twin of ``_account_shard``: runs on shard
+        ``sid``'s parent-side thread, which owns that worker's pipe for
+        the duration (one batched RPC per flush per shard).  Accounting
+        was already routed in the dispatcher; only ensembles come back.
+        A dead worker fails this shard's futures cleanly — other shards
+        and the dispatcher keep serving."""
+        try:
+            imgs = [it[0] for it in items]
+            ens = core.eval_on(sid, imgs, masks[positions], snapshot)
+            results = self._svc._results_from_ensembles(
+                acts[positions], n_sel[positions], cost[positions],
+                lat[positions], ens)
+            for (_, _, fut), res in zip(items, results):
+                fut.set_result(res)
+        except BaseException as e:
+            for _, _, fut in items:
+                if not fut.done():
+                    fut.set_exception(e)
+
+    # -- cache invalidation ----------------------------------------------
+    def invalidate_images(self, img_indices: Sequence[int]) -> int:
+        """Drop the images' cached artifacts EVERYWHERE this service
+        could read them back: the live shard backend (all regimes on all
+        worker processes for the process backend) and, when a pool is
+        attached, every segment core the pool has materialized on the
+        parent side.  This is the one invalidation entry point callers
+        should use — invalidating only the pool (or only the core)
+        leaves the other side serving stale ensembles."""
+        dropped = 0
+        if self.pool is not None:
+            dropped += self.pool.invalidate_images(img_indices)
+            if self.shard_backend == "thread":
+                # the live sharded core is one of the pool's _sharded
+                # entries, already swept above
+                return dropped
+        return dropped + self.core.invalidate_images(img_indices)
+
     # -- lifecycle -------------------------------------------------------
     def close(self) -> None:
         with self._cv:
@@ -247,6 +349,8 @@ class AsyncFederationService:
         self._dispatcher.join()
         for pool in self._shard_pools:
             pool.shutdown(wait=True)
+        if self.shard_backend == "process":
+            self.core.close()       # reap the worker processes
 
     def __enter__(self) -> "AsyncFederationService":
         return self

@@ -50,23 +50,23 @@ class FederationService:
         self._mask_weights = np.left_shift(
             np.int64(1), np.arange(env.n_providers, dtype=np.int64))
 
-    def _account_batch(self, imgs: Sequence[int], actions: np.ndarray,
-                       *, core=None, costs: Optional[np.ndarray] = None,
-                       latency_ms: Optional[np.ndarray] = None
-                       ) -> List[FederationResult]:
-        """Vectorized ensemble + cost/latency bookkeeping for one flush.
+    def _route_batch(self, imgs: Sequence[int], actions: np.ndarray,
+                     *, costs: Optional[np.ndarray] = None,
+                     latency_ms: Optional[np.ndarray] = None):
+        """One numpy pass over a flush: every request's binary action,
+        selection count, subset mask, summed fee, and modeled latency
+        (transmission is sequential over selected providers; inference is
+        parallel -> max latency, paper Sec. II-B).  ``costs`` /
+        ``latency_ms`` override the static per-provider fee/latency
+        vectors for one flush; a scenario pool swap passes the current
+        segment's vectors (a down provider bills 0 and, if selected,
+        costs its timeout latency).
 
-        One numpy pass computes every request's subset mask, summed fee,
-        and latency (transmission is sequential over selected providers;
-        inference is parallel -> max latency, paper Sec. II-B); only the
-        memoized ensemble lookups remain per-request.  ``core`` defaults
-        to the env's shared cache — the async service passes the request's
-        home shard instead.  ``costs`` / ``latency_ms`` override the
-        static per-provider fee/latency vectors for one flush; a scenario
-        pool swap passes the current segment's vectors (a down provider
-        bills 0 and, if selected, costs its timeout latency).
+        This is the shard-merge contract shared by both shard backends:
+        routing/accounting math happens here (parent side, vectorized),
+        only the ensemble lookups go to a shard — a thread's dict or a
+        worker process's pipe.
         """
-        core = self.env.core if core is None else core
         costs = self.env.costs if costs is None else \
             np.asarray(costs, np.float32)
         lat_v = self.provider_latency_ms if latency_ms is None else \
@@ -80,17 +80,46 @@ class FederationService:
         inf_lat = np.max(np.where(sel, lat_v, -np.inf), axis=1)
         latency = np.where(n_sel > 0,
                            self.transmission_ms * n_sel + inf_lat, 0.0)
+        return acts, n_sel, masks, cost, latency
+
+    def _results_from_ensembles(self, acts: np.ndarray, n_sel: np.ndarray,
+                                cost: np.ndarray, latency: np.ndarray,
+                                ensembles: Sequence[Detections]
+                                ) -> List[FederationResult]:
+        """Assemble FederationResults from routed accounting + per-request
+        ensembles (memo lookups or worker-process rows — identical merge
+        either way).  The empty selection keeps its explicit zero-cost /
+        zero-latency route."""
         out = []
-        for t, img in enumerate(imgs):
+        for t, ens in enumerate(ensembles):
             if n_sel[t] == 0:
                 # explicit empty route: nothing selected, nothing billed
                 out.append(FederationResult(Detections.empty(), acts[t],
                                             0.0, 0.0))
                 continue
-            ens = core.ensemble(int(img), int(masks[t]))
             out.append(FederationResult(ens, acts[t], float(cost[t]),
                                         float(latency[t])))
         return out
+
+    def _account_batch(self, imgs: Sequence[int], actions: np.ndarray,
+                       *, core=None, costs: Optional[np.ndarray] = None,
+                       latency_ms: Optional[np.ndarray] = None
+                       ) -> List[FederationResult]:
+        """Vectorized ensemble + cost/latency bookkeeping for one flush.
+
+        ``core`` defaults to the env's shared cache — the async service
+        passes the request's home shard instead; only the memoized
+        ensemble lookups remain per-request.
+        """
+        core = self.env.core if core is None else core
+        acts, n_sel, masks, cost, latency = self._route_batch(
+            imgs, actions, costs=costs, latency_ms=latency_ms)
+        ensembles = [
+            Detections.empty() if n_sel[t] == 0
+            else core.ensemble(int(img), int(masks[t]))
+            for t, img in enumerate(imgs)]
+        return self._results_from_ensembles(acts, n_sel, cost, latency,
+                                            ensembles)
 
     def _account(self, img_idx: int,
                  action: np.ndarray) -> FederationResult:

@@ -1,0 +1,438 @@
+"""Multi-process serving shards: the subset-evaluation plane off the GIL.
+
+``ShardedSubsetEvaluationCore`` splits the (image, subset) memo across W
+shards, but its workers are Python *threads*: every ensemble assembly —
+grouping loops, WBF, AP bookkeeping — serializes on one interpreter
+lock, so W shards buy concurrency, not parallelism.  This module
+promotes the shards to OS processes:
+
+  * **shared-nothing workers** — each worker process owns a private
+    :class:`SubsetEvaluationCore` built from the same traces + config;
+    no shared memory, no locks, no cache entry ever lives in two places
+    (``img % W`` routing is total and deterministic, exactly the thread
+    path's rule).
+  * **batched pipe RPC** — the parent sends one message per (flush,
+    shard): the shard's image/mask rows.  The worker precomputes tables
+    in one batch and answers with raw ``(boxes, scores, labels,
+    providers)`` arrays (``SubsetEvaluationCore.ensemble_rows``, the wire
+    contract); the parent rewraps them with ``Detections.fast``.  Merge
+    order is the caller's request order — identical to the thread path.
+  * **mid-stream pool swap** — a scenario segment crosses the process
+    boundary as a :class:`~repro.scenarios.pool.PoolSnapshot` (a
+    picklable *recipe*, not a trace dump): workers hold the pool's base
+    traces and rebuild each segment's TraceSet + core locally, keyed by
+    detection fingerprint, so revisited regimes re-hit their warm
+    per-process caches.  Snapshots install lazily, at most once per
+    (worker, fingerprint).
+  * **failure isolation** — a dead or wedged worker surfaces as
+    :class:`ShardWorkerError` on the next call touching that shard
+    (never a hang); ``close()`` always reaps the children.
+
+Workers start via the ``spawn`` context by default: the parent runs a
+jit-compiled agent and jax's runtime threads do not survive ``fork``.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.ensemble.boxes import Detections
+from repro.federation.evaluation import (SubsetEvaluationCore,
+                                         action_to_mask)
+from repro.federation.traces import TraceSet
+
+
+class ShardWorkerError(RuntimeError):
+    """A shard worker process died, wedged, or raised — the shard's
+    in-flight requests fail cleanly; the parent never blocks forever."""
+
+
+def _worker_main(conn, traces: TraceSet,
+                 cfg: Dict[str, object]) -> None:
+    """Worker process body: one private core per detection fingerprint.
+
+    ``cores[None]`` is the static core over the shipped traces; scenario
+    segments install under their ``dets_key`` and regenerate from the
+    SNAPSHOT's seed (the pool that authored it), never worker-local
+    state.  Every op answers with ``("ok", payload)`` or
+    ``("err", message)``; an unreadable pipe means the parent is gone
+    and the worker exits.
+    """
+    from repro.federation.vocab import WordGrouper
+    cores: Dict[object, SubsetEvaluationCore] = {
+        None: SubsetEvaluationCore(traces, **cfg)}
+    grouper = WordGrouper()
+    base_fp = tuple(p.fingerprint(detection_only=True)
+                    for p in traces.providers)
+    conn.send(("ok", "ready"))
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            return
+        op = msg[0]
+        try:
+            if op == "eval":
+                _, imgs, masks, key = msg
+                conn.send(("ok", cores[key].ensemble_rows(imgs, masks)))
+            elif op == "ap":
+                _, img, mask, against, key = msg
+                conn.send(("ok", cores[key].ap50(img, mask,
+                                                 against=against)))
+            elif op == "precompute":
+                _, imgs, key = msg
+                cores[key].precompute(imgs)
+                conn.send(("ok", None))
+            elif op == "install":
+                snap = msg[1]
+                if snap.dets_key not in cores:
+                    # lazy import: serving must not pull the scenario
+                    # engine unless a pool actually crosses the boundary
+                    from repro.scenarios.pool import build_segment_traces
+                    seg_traces = build_segment_traces(
+                        traces, snap.profiles, snap.dets_key, snap.seed,
+                        grouper, base_det_fp=base_fp)
+                    cores[snap.dets_key] = SubsetEvaluationCore(
+                        seg_traces, **cfg)
+                conn.send(("ok", None))
+            elif op == "invalidate":
+                # fan out across every installed core: the images' cached
+                # artifacts must die in ALL regimes, or a later segment
+                # swap would serve stale ensembles (the thread backend's
+                # counterpart is DynamicProviderPool.invalidate_images,
+                # which sweeps every materialized segment core)
+                _, imgs = msg
+                conn.send(("ok", sum(c.invalidate_images(imgs)
+                                     for c in cores.values())))
+            elif op == "introspect":
+                # stats/cache sizes aggregate over EVERY core this worker
+                # holds (all regimes), mirroring the thread path's
+                # pool.agg_core_stats — a scenario-serving worker's
+                # activity lives in its segment cores, not the base one.
+                # cached_images stays scoped to the requested key: it is
+                # the per-core partition-corruption check surface.
+                key = msg[1]
+                agg_stats: Dict[str, int] = {}
+                agg_sizes: Dict[str, int] = {}
+                for c in cores.values():
+                    for k, v in c.stats.items():
+                        agg_stats[k] = agg_stats.get(k, 0) + v
+                    for k, v in c.cache_sizes().items():
+                        agg_sizes[k] = agg_sizes.get(k, 0) + v
+                conn.send(("ok", {
+                    "cache_sizes": agg_sizes,
+                    "stats": agg_stats,
+                    "cached_images": cores[key].cached_images(),
+                    "n_cores": len(cores),
+                    "pid": os.getpid()}))
+            elif op == "ping":
+                conn.send(("ok", "pong"))
+            elif op == "crash":
+                # test hook: die without cleanup, as a real crash would
+                os._exit(13)
+            elif op == "stop":
+                conn.send(("ok", None))
+                conn.close()
+                return
+            else:
+                conn.send(("err", f"unknown op {op!r}"))
+        except BaseException as e:       # noqa: BLE001 — ship it back
+            conn.send(("err", f"{type(e).__name__}: {e}"))
+
+
+class ProcessShardedSubsetEvaluationCore:
+    """W shared-nothing worker *processes* keyed by ``img_idx % W``.
+
+    Exposes the same routing + evaluation surface as
+    :class:`ShardedSubsetEvaluationCore` (``shard_id`` / ``partition`` /
+    ``ensemble`` / ``ap50`` / ``cost`` / ``precompute`` /
+    ``invalidate_images`` / ``cache_sizes`` / ``stats`` /
+    ``shard_images``) so the async service can hold either backend, plus
+    the batched per-shard entry point the dispatcher actually uses
+    (:meth:`eval_on`).  Results are bit-identical to the thread path:
+    same routing rule, same core math, same merge order.
+
+    Thread safety: any thread may call any method; one lock per worker
+    serializes that worker's pipe (the async service keeps its
+    one-parent-thread-per-shard layout, so the locks are uncontended on
+    the hot path).
+    """
+
+    def __init__(self, traces: TraceSet, *, n_shards: int = 4,
+                 voting: str = "affirmative", ablation: str = "wbf",
+                 iou_thr: float = 0.5,
+                 use_kernel: Union[bool, str] = "auto",
+                 mp_context: str = "spawn",
+                 start_timeout_s: float = 180.0,
+                 op_timeout_s: float = 300.0):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        from repro.ensemble.pipeline import resolve_use_kernel
+        self.n_shards = int(n_shards)
+        self.traces = traces
+        self.n_providers = traces.n_providers
+        self.costs = traces.costs()
+        self.full_mask = (1 << self.n_providers) - 1
+        self.op_timeout_s = float(op_timeout_s)
+        # resolve "auto" in the parent: every worker must make the same
+        # kernel decision the parent would, regardless of its own env
+        self._cfg = {"voting": voting, "ablation": ablation,
+                     "iou_thr": iou_thr,
+                     "use_kernel": resolve_use_kernel(use_kernel)}
+        self._ctx = mp.get_context(mp_context)
+        self._procs: List[mp.Process] = []
+        self._conns = []
+        self._locks = [threading.Lock() for _ in range(self.n_shards)]
+        self._installed: List[set] = [set() for _ in range(self.n_shards)]
+        self._failed = [False] * self.n_shards
+        self._closed = False
+        # spawn everything first (children import in parallel), then wait
+        # for each ready handshake — a failed import surfaces here, not
+        # as a hang on the first eval
+        for i in range(self.n_shards):
+            parent_conn, child_conn = self._ctx.Pipe(duplex=True)
+            proc = self._ctx.Process(
+                target=_worker_main,
+                args=(child_conn, traces, self._cfg),
+                name=f"fed-mp-shard-{i}", daemon=True)
+            proc.start()
+            child_conn.close()
+            self._procs.append(proc)
+            self._conns.append(parent_conn)
+        try:
+            for sid in range(self.n_shards):
+                self._recv(sid, "start", timeout_s=start_timeout_s)
+        except BaseException:
+            self.close()
+            raise
+
+    @classmethod
+    def like(cls, core: SubsetEvaluationCore, n_shards: int, *,
+             mp_context: str = "spawn",
+             **kw) -> "ProcessShardedSubsetEvaluationCore":
+        """A process-sharded core with the same ensemble configuration as
+        ``core`` (fresh, shared-nothing caches — a process shard never
+        migrates another core's memo)."""
+        return cls(core.traces, n_shards=n_shards, mp_context=mp_context,
+                   **core.config(), **kw)
+
+    @classmethod
+    def for_pool(cls, pool, n_shards: int, *, mp_context: str = "spawn",
+                 **kw) -> "ProcessShardedSubsetEvaluationCore":
+        """Workers seeded with the pool's BASE traces: any segment of
+        ``pool`` can then cross the boundary as a ``PoolSnapshot`` recipe
+        (which carries the pool's regeneration seed) and be rebuilt
+        bit-identically in-process."""
+        return cls(pool.base_traces, n_shards=n_shards,
+                   mp_context=mp_context,
+                   voting=pool.voting, ablation=pool.ablation,
+                   use_kernel=pool.use_kernel, **kw)
+
+    # -- pipe plumbing ---------------------------------------------------
+    def _dead(self, sid: int, during: str, why: str) -> ShardWorkerError:
+        code = self._procs[sid].exitcode
+        return ShardWorkerError(
+            f"shard {sid} worker {why} during {during!r}"
+            f" (exitcode={code})")
+
+    def _fail_shard(self, sid: int, during: str,
+                    why: str) -> ShardWorkerError:
+        """Condemn shard ``sid`` permanently.  After a timeout the pipe is
+        desynchronized — the worker's late reply would be read as the
+        answer to the NEXT request, silently returning wrong ensembles —
+        so the only safe move is to reap the worker and fail every
+        subsequent call on this shard fast."""
+        self._failed[sid] = True
+        proc = self._procs[sid]
+        if proc.is_alive():
+            proc.terminate()
+            proc.join(timeout=2.0)
+        if proc.is_alive():
+            proc.kill()
+            proc.join(timeout=2.0)
+        return self._dead(sid, during, why)
+
+    def _recv(self, sid: int, during: str, *,
+              timeout_s: Optional[float] = None):
+        conn, proc = self._conns[sid], self._procs[sid]
+        deadline = time.monotonic() + (timeout_s if timeout_s is not None
+                                       else self.op_timeout_s)
+        while not conn.poll(0.05):
+            if not proc.is_alive():
+                raise self._fail_shard(sid, during, "died")
+            if time.monotonic() > deadline:
+                raise self._fail_shard(sid, during, "timed out")
+        try:
+            status, payload = conn.recv()
+        except (EOFError, OSError):
+            raise self._fail_shard(sid, during, "died") from None
+        if status != "ok":
+            # the worker answered: the pipe is still in sync, the shard
+            # survives — only THIS op failed (e.g. an unknown segment key)
+            raise ShardWorkerError(f"shard {sid} worker error during "
+                                   f"{during!r}: {payload}")
+        return payload
+
+    def _rpc_locked(self, sid: int, msg: tuple):
+        """Send + receive on shard ``sid``'s pipe; caller holds the lock."""
+        if self._closed:
+            raise ShardWorkerError("process shard pool is closed")
+        if self._failed[sid]:
+            raise ShardWorkerError(
+                f"shard {sid} worker is gone (earlier crash/timeout); "
+                f"restart the service to restore it")
+        try:
+            self._conns[sid].send(msg)
+        except (BrokenPipeError, OSError):
+            raise self._fail_shard(sid, msg[0], "died") from None
+        return self._recv(sid, msg[0])
+
+    def _rpc(self, sid: int, msg: tuple):
+        with self._locks[sid]:
+            return self._rpc_locked(sid, msg)
+
+    def _ensure_installed_locked(self, sid: int, snapshot) -> object:
+        key = snapshot.dets_key
+        if key not in self._installed[sid]:
+            self._rpc_locked(sid, ("install", snapshot))
+            self._installed[sid].add(key)
+        return key
+
+    # -- shard addressing (same rule as the thread path) ------------------
+    def shard_id(self, img_idx: int) -> int:
+        return int(img_idx) % self.n_shards
+
+    def partition(self, img_indices: Sequence[int]) -> Dict[int, List[int]]:
+        groups: Dict[int, List[int]] = {}
+        for i in img_indices:
+            groups.setdefault(self.shard_id(i), []).append(int(i))
+        return groups
+
+    # -- batched per-shard entry point (the dispatcher hot path) ----------
+    def eval_on(self, sid: int, img_indices: Sequence[int],
+                masks: Sequence[int],
+                snapshot=None) -> List[Detections]:
+        """Ensembles for (image, mask) rows homed on shard ``sid``, in
+        request order.  ``snapshot`` scopes the rows to a scenario
+        segment (installed lazily, once per worker per fingerprint)."""
+        imgs = [int(i) for i in img_indices]
+        ms = [int(m) for m in masks]
+        with self._locks[sid]:
+            key = None if snapshot is None else \
+                self._ensure_installed_locked(sid, snapshot)
+            rows = self._rpc_locked(sid, ("eval", imgs, ms, key))
+        return [Detections.fast(*r) for r in rows]
+
+    # -- delegated single-pair surface ------------------------------------
+    def mask_of(self, action: np.ndarray) -> int:
+        return action_to_mask(action)
+
+    def ensemble(self, img_idx: int, mask: int,
+                 snapshot=None) -> Detections:
+        return self.eval_on(self.shard_id(img_idx), [img_idx], [mask],
+                            snapshot)[0]
+
+    def ap50(self, img_idx: int, mask: int, *, against: str = "gt",
+             snapshot=None) -> float:
+        sid = self.shard_id(img_idx)
+        with self._locks[sid]:
+            key = None if snapshot is None else \
+                self._ensure_installed_locked(sid, snapshot)
+            return float(self._rpc_locked(
+                sid, ("ap", int(img_idx), int(mask), against, key)))
+
+    def cost(self, mask: int) -> float:
+        # mask costs are image-independent config, not cache state: answer
+        # locally instead of a pipe round-trip
+        bits = np.asarray([(int(mask) >> i) & 1
+                           for i in range(self.n_providers)], bool)
+        return float(np.sum(self.costs * bits))
+
+    def precompute(self, img_indices: Sequence[int],
+                   snapshot=None) -> None:
+        for sid, imgs in self.partition(img_indices).items():
+            with self._locks[sid]:
+                key = None if snapshot is None else \
+                    self._ensure_installed_locked(sid, snapshot)
+                self._rpc_locked(sid, ("precompute", imgs, key))
+
+    def invalidate_images(self, img_indices: Sequence[int]) -> int:
+        """Same partition rule as every delegated call; each worker drops
+        the images from every core it holds (all regimes), preserving the
+        invalidation fan-out across the process boundary."""
+        dropped = 0
+        for sid, imgs in self.partition(img_indices).items():
+            dropped += int(self._rpc(sid, ("invalidate", imgs)))
+        return dropped
+
+    # -- aggregate introspection (one pipe round-trip per worker) ---------
+    def _introspect(self, key=None) -> List[dict]:
+        return [self._rpc(sid, ("introspect", key))
+                for sid in range(self.n_shards)]
+
+    def cache_sizes(self) -> Dict[str, int]:
+        agg = {"tables": 0, "ensembles": 0, "ap_entries": 0}
+        for rep in self._introspect():
+            for k, v in rep["cache_sizes"].items():
+                agg[k] += v
+        return agg
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        agg: Dict[str, int] = {}
+        for rep in self._introspect():
+            for k, v in rep["stats"].items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def shard_images(self) -> List[List[int]]:
+        """Per-shard cached image ids (default core) — the same corruption
+        check surface as the thread path: every entry of
+        ``shard_images()[s]`` must satisfy ``img % W == s``."""
+        return [rep["cached_images"] for rep in self._introspect()]
+
+    def worker_pids(self) -> List[int]:
+        return [p.pid for p in self._procs]
+
+    # -- lifecycle --------------------------------------------------------
+    def close(self, *, join_timeout_s: float = 10.0) -> None:
+        """Graceful stop: ask every live worker to exit, join, escalate
+        to terminate/kill; always reaps, idempotent, never raises."""
+        if self._closed:
+            return
+        self._closed = True
+        for sid, (proc, conn) in enumerate(zip(self._procs, self._conns)):
+            try:
+                if proc.is_alive():
+                    conn.send(("stop",))
+            except (BrokenPipeError, OSError):
+                pass
+        for proc, conn in zip(self._procs, self._conns):
+            proc.join(timeout=join_timeout_s)
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=2.0)
+            if proc.is_alive():
+                proc.kill()
+                proc.join(timeout=2.0)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def __enter__(self) -> "ProcessShardedSubsetEvaluationCore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):      # best-effort: tests that forget close()
+        try:
+            self.close(join_timeout_s=1.0)
+        except BaseException:
+            pass

@@ -217,3 +217,38 @@ def test_queued_requests_drain_on_close():
     for f in futs:
         assert f.result(timeout=5).cost_milli_usd == pytest.approx(
             float(ENV.costs[0] + ENV.costs[1]))
+    # the counter proves WHY the flush fired: the drain path, not the
+    # 10-second timer racing the test
+    assert asvc.stats["flush_drain"] >= 1
+    assert asvc.stats["flush_timeout"] == 0
+    assert asvc.stats["requests"] == 10
+
+
+def test_flush_reason_counters_full_vs_timeout():
+    """Flush-deadline behavior asserted via the flush-reason counters —
+    no wall-clock sleeps, no dependence on how fast this machine runs.
+
+    With a 10-second deadline, a burst of 3*max_batch requests can only
+    leave the queue by filling it (``flush_full``); a lone request can
+    only leave through its deadline (``flush_timeout``), however long the
+    scheduler takes to get there."""
+    with AsyncFederationService(ENV, FixedAgent([1, 0, 0]), max_batch=4,
+                                max_wait_ms=10_000.0, workers=2) as asvc:
+        asvc.handle_many(list(range(12)))       # 3 batch-filling flushes
+        assert asvc.stats["flush_full"] == 3
+        assert asvc.stats["flush_timeout"] == 0
+        assert asvc.stats["flushes"] == 3
+    with AsyncFederationService(ENV, FixedAgent([1, 0, 0]), max_batch=4,
+                                max_wait_ms=1.0, workers=2) as asvc:
+        asvc.handle(0)                          # can never fill the batch
+        assert asvc.stats["flush_timeout"] == 1
+        assert asvc.stats["flush_full"] == 0
+        assert asvc.stats["flush_drain"] == 0
+
+
+def test_reset_stats_zeroes_flush_reasons():
+    with AsyncFederationService(ENV, FixedAgent([1, 0, 0]), max_batch=2,
+                                workers=1) as asvc:
+        asvc.handle_many([0, 1, 2, 3])
+        asvc.reset_stats()
+        assert all(v == 0 for v in asvc.stats.values())

@@ -112,3 +112,27 @@ def test_no_pool_service_is_unchanged():
         r = svc.handle(5)
         assert svc.clock == 0
     assert r.cost_milli_usd == pytest.approx(float(PROVS[1].cost_milli_usd))
+
+
+def test_pool_invalidate_sweeps_every_materialized_segment_core():
+    """Pool-level invalidation must reach EVERY segment core the pool has
+    built (the thread-backend counterpart of the process workers'
+    all-regime fan-out), so a revisited regime recomputes instead of
+    serving stale cached ensembles — and recomputes identically when the
+    underlying traces are unchanged."""
+    pool, env = _pool_env(horizon=300, n=24)
+    full = (1 << pool.n_providers) - 1
+    # materialize two segments' cores and warm image 3 in both
+    steps = [0, 299]
+    before = {}
+    for s in steps:
+        core = pool.core_at(s)
+        before[s] = core.ap50(3, core.full_mask & full)
+        assert 3 in core.cached_images()
+    dropped = pool.invalidate_images([3])
+    assert dropped >= len({pool.view_at(s).dets_key for s in steps})
+    for s in steps:                 # swept everywhere, BEFORE any rewarm
+        assert 3 not in pool.core_at(s).cached_images()
+    for s in steps:                 # ... and recomputes loss-free
+        assert pool.core_at(s).ap50(3, pool.core_at(s).full_mask
+                                    & full) == before[s]

@@ -1,0 +1,134 @@
+"""Property tests: the process-backed shard pool must agree with the
+unsharded reference core under random op streams — evaluations
+interleaved with per-image invalidations and mid-stream pool (segment)
+swaps — and its partition invariants must survive them.
+
+Mirrors ``tests/test_sharded_core_fuzz.py`` with the thread shards
+replaced by worker PROCESSES.  Worker pools are spawned once per module
+(seconds each) and shared across hypothesis examples: parity assertions
+never depend on cache temperature, and invalidations are mirrored on
+both sides, so persistent state cannot mask a divergence — any
+cross-example cache reuse only makes the interleaving harsher.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+pytest.importorskip("jax")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.federation.evaluation import SubsetEvaluationCore  # noqa: E402
+from repro.federation.providers import default_providers  # noqa: E402
+from repro.federation.traces import generate_traces  # noqa: E402
+from repro.serving.mp_shards import \
+    ProcessShardedSubsetEvaluationCore  # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+TR = generate_traces(default_providers(), 20, seed=9)
+N = TR.n_providers
+ALL_MASKS = list(range(1, 1 << N))
+W = 3
+
+
+@pytest.fixture(scope="module")
+def pair():
+    ref = SubsetEvaluationCore(TR)
+    cut = ProcessShardedSubsetEvaluationCore(TR, n_shards=W)
+    yield ref, cut
+    cut.close()
+
+
+# op stream: ("ap", img, mask) | ("ens", img, mask) | ("inv", [imgs])
+_op = st.one_of(
+    st.tuples(st.just("ap"), st.integers(0, len(TR) - 1),
+              st.sampled_from(ALL_MASKS)),
+    st.tuples(st.just("ens"), st.integers(0, len(TR) - 1),
+              st.sampled_from(ALL_MASKS)),
+    st.tuples(st.just("inv"),
+              st.lists(st.integers(0, len(TR) - 1), min_size=1,
+                       max_size=6)),
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(ops=st.lists(_op, min_size=1, max_size=25))
+def test_process_shards_match_unsharded_under_invalidations(pair, ops):
+    ref, cut = pair
+    for op in ops:
+        if op[0] == "inv":
+            # counts may differ only by entries surviving from earlier
+            # examples on ONE side — mirror the drop, then require the
+            # caches to answer identically afterwards
+            ref.invalidate_images(op[1])
+            cut.invalidate_images(op[1])
+        elif op[0] == "ap":
+            assert cut.ap50(op[1], op[2]) == ref.ap50(op[1], op[2])
+        else:
+            a, b = cut.ensemble(op[1], op[2]), ref.ensemble(op[1], op[2])
+            np.testing.assert_array_equal(a.boxes, b.boxes)
+            np.testing.assert_array_equal(a.scores, b.scores)
+            np.testing.assert_array_equal(a.labels, b.labels)
+    # partition invariants after the stream: entries only in their home
+    # shard, no duplicates across shards
+    shard_imgs = cut.shard_images()
+    flat = [i for imgs in shard_imgs for i in imgs]
+    assert len(flat) == len(set(flat))
+    for sid, imgs in enumerate(shard_imgs):
+        assert all(i % W == sid for i in imgs)
+
+
+@pytest.fixture(scope="module")
+def pool_pair():
+    """A scenario pool plus a process shard pool seeded from its base
+    traces — segments cross the process boundary as snapshots."""
+    from repro.scenarios import DynamicProviderPool, build_scenario
+    providers = default_providers()
+    schedule = build_scenario("accuracy_drift", providers, horizon=120)
+    pool = DynamicProviderPool(providers, schedule, n_images=16, seed=0)
+    cut = ProcessShardedSubsetEvaluationCore.for_pool(pool, W)
+    yield pool, cut
+    cut.close()
+
+
+_seg_op = st.one_of(
+    st.tuples(st.just("ap"), st.integers(0, 15),
+              st.sampled_from(ALL_MASKS)),
+    st.tuples(st.just("ens"), st.integers(0, 15),
+              st.sampled_from(ALL_MASKS)),
+    st.tuples(st.just("swap"), st.integers(0, 119)),
+    st.tuples(st.just("inv"),
+              st.lists(st.integers(0, 15), min_size=1, max_size=4)),
+)
+
+
+@settings(max_examples=8, deadline=None)
+@given(ops=st.lists(_seg_op, min_size=2, max_size=20))
+def test_process_shards_match_pool_cores_across_segment_swaps(pool_pair,
+                                                              ops):
+    """Mid-stream pool swaps: after any interleaving of segment swaps,
+    evaluations and invalidations, the worker processes must answer
+    exactly like the pool's own (in-process) segment cores."""
+    pool, cut = pool_pair
+    step = 0
+    for op in ops:
+        if op[0] == "swap":
+            step = op[1]
+            continue
+        snap = pool.snapshot_at(step)
+        ref = pool.core_at(step)
+        if op[0] == "inv":
+            # the process pool drops the images from EVERY regime it has
+            # installed; mirror on every materialized pool core
+            cut.invalidate_images(op[1])
+            for core in pool._cores.values():
+                core.invalidate_images(op[1])
+        elif op[0] == "ap":
+            assert cut.ap50(op[1], op[2], snapshot=snap) == \
+                ref.ap50(op[1], op[2])
+        else:
+            a = cut.ensemble(op[1], op[2], snapshot=snap)
+            b = ref.ensemble(op[1], op[2])
+            np.testing.assert_array_equal(a.boxes, b.boxes)
+            np.testing.assert_array_equal(a.scores, b.scores)
+            np.testing.assert_array_equal(a.labels, b.labels)

@@ -249,3 +249,27 @@ def test_agent_policy_batched_matches_single():
     batch = pol.select_batch(env.features[env.test_idx])
     single = np.stack([pol(env.features[i]) for i in env.test_idx])
     np.testing.assert_array_equal(batch, single)
+
+
+def test_pickled_core_arrives_cold_and_answers_identically():
+    """The pickle contract of the serving plane: a core crossing a
+    process boundary ships WITHOUT its memo caches (payload stays small)
+    and, rebuilt on the far side, answers bit-for-bit identically."""
+    import pickle
+
+    core = SubsetEvaluationCore(TR)
+    full = (1 << N) - 1
+    warm = {(i, m): core.ap50(i, m) for i in (0, 3, 7) for m in (1, 5, full)}
+    blob = pickle.dumps(core)
+    clone = pickle.loads(blob)
+    assert clone.cache_sizes() == {"tables": 0, "ensembles": 0,
+                                   "ap_entries": 0}         # arrives cold
+    assert all(v == 0 for v in clone.stats.values())
+    for (i, m), want in warm.items():
+        assert clone.ap50(i, m) == want
+        a, b = clone.ensemble(i, m), core.ensemble(i, m)
+        np.testing.assert_array_equal(a.boxes, b.boxes)
+        np.testing.assert_array_equal(a.scores, b.scores)
+    # stripping the caches is what keeps the payload shippable: the blob
+    # must not grow with cache temperature
+    assert len(blob) <= len(pickle.dumps(SubsetEvaluationCore(TR))) * 1.1

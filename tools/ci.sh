@@ -1,24 +1,32 @@
 #!/usr/bin/env bash
 # CI entry point.
 #
-#   tools/ci.sh          tier-1 lane: import hygiene, fast tests
-#                        (-m "not slow"), subset-cache smoke benchmark
-#   tools/ci.sh --full   everything: slow driver tests + the benchmark
-#                        regression gates (tools/check_bench.py compares
-#                        fresh subset_cache/serving/train_driver/scenarios
-#                        numbers against the committed benchmarks/
-#                        results/*.json baselines; REPRO_BENCH_TOLERANCE
-#                        overrides the 30% gate on noisy runners)
+#   tools/ci.sh            tier-1 lane: import hygiene, fast tests
+#                          (-m "not slow"), subset-cache smoke benchmark
+#   tools/ci.sh --tests    tier-1 tests only        (matrix job: tests)
+#   tools/ci.sh --hygiene  hygiene + smoke bench    (matrix job: hygiene)
+#   tools/ci.sh --full     everything: slow driver/serving tests + the
+#                          benchmark regression gates (tools/check_bench.py
+#                          compares fresh subset_cache/serving/train_driver/
+#                          scenarios/serving_mp/serving_scenarios numbers
+#                          against the committed benchmarks/results/*.json
+#                          baselines; REPRO_BENCH_TOLERANCE overrides the
+#                          30% gate on noisy runners)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-FULL=0
-if [[ "${1:-}" == "--full" ]]; then
-    FULL=1
-fi
+FULL=0 TESTS=1 HYGIENE=1
+case "${1:-}" in
+    --full)    FULL=1 ;;
+    --tests)   HYGIENE=0 ;;
+    --hygiene) TESTS=0 ;;
+    "") ;;
+    *) echo "usage: tools/ci.sh [--full|--tests|--hygiene]" >&2; exit 2 ;;
+esac
 
+if [[ "$HYGIENE" == 1 ]]; then
 echo "== optional-dependency import hygiene =="
 # hypothesis (property tests) and jax (accelerator extras) are optional
 # on minimal containers: any test importing them without a preceding
@@ -39,38 +47,55 @@ for mod in ("hypothesis", "jax"):
         skip = re.search(rf"importorskip\(\s*['\"]{mod}['\"]\s*\)", src)
         if skip is None or skip.start() > imp.start():
             bad.append(f"{path} ({mod})")
-# scenario tests import repro.* (which pulls jax transitively) and run
-# training drivers: each file must guard jax explicitly and mark its
-# driver tests slow so the tier-1 lane stays fast
-scen = sorted(pathlib.Path("tests").glob("test_scenarios*.py"))
-if not scen:
-    bad.append("tests/test_scenarios*.py (missing)")
-for path in scen:
-    src = path.read_text()
-    if 'importorskip("jax")' not in src and \
-            "importorskip('jax')" not in src:
-        bad.append(f"{path} (no jax importorskip)")
-    if "run_online" in src and "pytest.mark.slow" not in src:
-        bad.append(f"{path} (online-driver test without a slow marker)")
+
+
+def guarded_suite(pattern, why, *, require_slow_when=None):
+    """Suites that import repro.* (pulling jax transitively) and may run
+    drivers or spawn worker processes: every file must guard jax
+    explicitly, and files matching ``require_slow_when`` must mark
+    themselves slow so the tier-1 lane stays fast.  Offenders are listed
+    by name so the failure is actionable, and a missing suite is itself
+    an offense (the gate must not pass vacuously)."""
+    files = sorted(pathlib.Path("tests").glob(pattern))
+    if not files:
+        bad.append(f"tests/{pattern} (missing: {why})")
+    for path in files:
+        src = path.read_text()
+        if 'importorskip("jax")' not in src and \
+                "importorskip('jax')" not in src:
+            bad.append(f"{path} (no jax importorskip)")
+        if require_slow_when is None or require_slow_when(src):
+            if "pytest.mark.slow" not in src:
+                bad.append(f"{path} (no slow marker: {why})")
+
+
+guarded_suite("test_scenarios*.py", "scenario suite",
+              require_slow_when=lambda src: "run_online" in src)
+# multi-process serving suites spawn worker processes (seconds each on
+# the spawn context): slow-marked wholesale, nightly --full runs them
+guarded_suite("test_serving_mp*.py", "process-shard serving suite")
+guarded_suite("test_serving_scenarios*.py", "scenario serving suite")
 if bad:
     sys.exit("optional dependency imported without a preceding "
-             "pytest.importorskip guard (or scenario-test hygiene "
-             "violation): " + ", ".join(bad))
+             "pytest.importorskip guard (or serving/scenario test "
+             "hygiene violation): " + ", ".join(bad))
 print("ok")
 PY
+fi
 
 if [[ "$FULL" == 1 ]]; then
     echo "== tests (full, slow included) =="
     python -m pytest -x -q
-else
+elif [[ "$TESTS" == 1 ]]; then
     echo "== tier-1 tests =="
     python -m pytest -x -q -m "not slow"
 fi
 
 if [[ "$FULL" == 1 ]]; then
     echo "== benchmark regression gates (fresh vs committed baselines) =="
-    python tools/check_bench.py subset_cache serving train_driver scenarios
-else
+    python tools/check_bench.py subset_cache serving train_driver \
+        scenarios serving_mp serving_scenarios
+elif [[ "$HYGIENE" == 1 ]]; then
     echo "== subset-cache smoke benchmark (50 images) =="
     # scratch results dir: the committed baselines under benchmarks/
     # results/ are the check_bench reference and must not be clobbered
