@@ -50,6 +50,29 @@ def _traces():
     return generate_traces(default_providers(), IMAGES, seed=0)
 
 
+def _best_of(*fns, rounds: int = 3, warmup: bool = True):
+    """Best-of-``rounds`` wall seconds for each candidate in ``fns``.
+
+    The candidates' timed passes interleave round-by-round (fn0, fn1,
+    ..., fn0, fn1, ...), so a load spike on a shared machine hits every
+    candidate instead of biasing whichever ran during the spike; each
+    keeps its best round.  ``warmup`` runs one untimed pass of each
+    first, absorbing jit/compile/memo cost — turn it off for cold-path
+    benchmarks whose setup cost IS the measurement.  Returns a float for
+    a single candidate, else a list in ``fns`` order.
+    """
+    if warmup:
+        for fn in fns:
+            fn()
+    best = [float("inf")] * len(fns)
+    for _ in range(rounds):
+        for k, fn in enumerate(fns):
+            t0 = time.time()
+            fn()
+            best[k] = min(best[k], time.time() - t0)
+    return best[0] if len(fns) == 1 else best
+
+
 # ---------------------------------------------------------------------------
 # Table I: per-provider AP
 # ---------------------------------------------------------------------------
@@ -288,6 +311,105 @@ def bench_subset_cache():
 
 
 # ---------------------------------------------------------------------------
+# Full-lattice subset evaluation vs the memoized per-bitmask loop
+# ---------------------------------------------------------------------------
+
+def bench_lattice():
+    """One vectorized pass over all 2^N - 1 subsets per image
+    (``evaluate_lattice``) vs the memoized per-bitmask enumeration
+    (``best_subset``), at N in {5, 7, 10}, plus a first N=12 exact
+    oracle: ``upper_bound`` end to end — 4095 subsets per test image.
+
+    Both paths start COLD every round (fresh cores, so IoU tables and
+    memo rebuild) because the lattice's win IS the cold path — warm,
+    both are memo lookups.  Rounds interleave loop/lattice via the
+    shared best-of harness so machine noise hits both, and the
+    regression gate (tools/check_bench.py) checks the speedup RATIOS at
+    N=7 and N=10, which cancel absolute machine speed.  The N=12 loop
+    time is projected from a strided subsample of masks (popcount-order
+    stride keeps the ensemble-size mixture representative) — running
+    the full loop at N=12 is exactly what the lattice exists to avoid.
+    """
+    from repro.core.loops import upper_bound
+    from repro.federation.env import ArmolEnv
+    from repro.federation.evaluation import SubsetEvaluationCore, \
+        popcount_masks
+    from repro.federation.providers import lattice_stress_providers
+    from repro.federation.traces import generate_traces
+
+    rounds = int(os.environ.get("REPRO_BENCH_ROUNDS", "3"))
+    n_images = min(IMAGES, 12)
+    out = {"n_images": n_images, "rounds": rounds, "sizes": {}}
+    for n_prov in (5, 7, 10):
+        traces = generate_traces(lattice_stress_providers(n_prov),
+                                 n_images, seed=0)
+        masks = popcount_masks(n_prov)
+        picks = {}
+
+        def run_loop():
+            core = SubsetEvaluationCore(traces)
+            picks["loop"] = [core.best_subset(i, masks)
+                             for i in range(n_images)]
+
+        def run_lattice():
+            core = SubsetEvaluationCore(traces)
+            rows = []
+            for i in range(n_images):
+                lat = core.evaluate_lattice(i)
+                j = int(np.argmax(lat.ap))
+                rows.append((int(lat.masks[j]), float(lat.ap[j])))
+            picks["lattice"] = rows
+
+        loop_s, lat_s = _best_of(run_loop, run_lattice, rounds=rounds,
+                                 warmup=False)
+        mismatches = sum(a != b for a, b in zip(picks["loop"],
+                                                picks["lattice"]))
+        assert mismatches == 0, \
+            f"lattice argmax disagrees with best_subset on {mismatches} " \
+            f"images at N={n_prov}"
+        row = {"n_subsets": len(masks), "loop_s": round(loop_s, 3),
+               "lattice_s": round(lat_s, 3),
+               "speedup": round(loop_s / max(lat_s, 1e-9), 2)}
+        out["sizes"][f"n{n_prov}"] = row
+        _emit(f"lattice/n{n_prov}",
+              1e6 * lat_s / (n_images * len(masks)),
+              f"loop={row['loop_s']}s;lattice={row['lattice_s']}s;"
+              f"speedup={row['speedup']}x")
+    out["speedup_n7"] = out["sizes"]["n7"]["speedup"]
+    out["speedup_n10"] = out["sizes"]["n10"]["speedup"]
+
+    # N=12: the first exact oracle at 4095 subsets/image, end to end
+    n12 = 12
+    tr12 = generate_traces(lattice_stress_providers(n12), n_images, seed=0)
+    env = ArmolEnv(tr12, mode="gt", beta=0.0, seed=1)
+    t0 = time.time()
+    ub = upper_bound(env)
+    ub_s = time.time() - t0
+    masks12 = popcount_masks(n12)
+    sample = masks12[::64]              # strided over popcount order
+    core = SubsetEvaluationCore(tr12)
+    img0 = int(env.test_idx[0])
+    core.precompute([img0])
+    t0 = time.time()
+    for m in sample:
+        core.ap50(img0, m)
+    loop12_proj = ((time.time() - t0) / len(sample)
+                   * len(masks12) * len(env.test_idx))
+    out["n12_oracle"] = {
+        "n_subsets": len(masks12), "test_images": len(env.test_idx),
+        "upper_bound_s": round(ub_s, 2),
+        "loop_projected_s": round(loop12_proj, 1),
+        "projected_speedup": round(loop12_proj / max(ub_s, 1e-9), 1),
+        "ub_ap50": round(ub["ap50"], 2), "ub_cost": round(ub["cost"], 3)}
+    _emit("lattice/n12_oracle", 1e6 * ub_s / max(len(env.test_idx), 1),
+          f"upper_bound={out['n12_oracle']['upper_bound_s']}s;"
+          f"loop_projected={out['n12_oracle']['loop_projected_s']}s;"
+          f"ap50={out['n12_oracle']['ub_ap50']}")
+    _save("lattice", out)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Training drivers: multi-lane batched vs sequential reference steps/sec
 # ---------------------------------------------------------------------------
 
@@ -350,18 +472,9 @@ def bench_train_driver():
             if i > 0:
                 dt = min(dt, time.time() - t0)
             agent = agent_fn.last
-        ev = min(_timeit3(lambda: evaluate_policy(agent_policy(agent),
+        ev = min(_best_of(lambda: evaluate_policy(agent_policy(agent),
                                                   env)), dt / 2)
         return hist, dt - dkw.get("epochs", 1) * ev
-
-    def _timeit3(fn):
-        fn()
-        best = float("inf")
-        for _ in range(3):
-            t0 = time.time()
-            fn()
-            best = min(best, time.time() - t0)
-        return best
 
     class _remember:
         def __init__(self, fn):
@@ -942,6 +1055,7 @@ BENCHES = {
     "baselines": bench_baselines,
     "scalability": bench_scalability,
     "subset_cache": bench_subset_cache,
+    "lattice": bench_lattice,
     "train_driver": bench_train_driver,
     "serving": bench_serving,
     "serving_mp": bench_serving_mp,

@@ -122,11 +122,15 @@ def evaluate_policy(select_fn: Callable[[np.ndarray], np.ndarray],
     actions = _policy_actions(select_fn, env, env.test_idx)
     env.core.precompute(env.test_idx)
     dts, gts = {}, {}
-    counts = np.zeros(env.n_providers, np.int64)
+    bits = actions > 0.5
+    counts = bits.sum(axis=0).astype(np.int64)
+    # one fee matvec over the whole action matrix; the per-row reduction
+    # matches the old per-action np.sum bit for bit, and the python
+    # accumulation keeps the old sequential summation order
     total_cost = 0.0
+    for c in (env.costs * bits).sum(axis=1):
+        total_cost += float(c)
     for img, a in zip(env.test_idx, actions):
-        counts += (a > 0.5).astype(np.int64)
-        total_cost += float(np.sum(env.costs * (a > 0.5)))
         dts[int(img)] = env.core.ensemble(int(img), env.core.mask_of(a))
         gts[int(img)] = env.traces.gts[int(img)]
     n = max(len(env.test_idx), 1)
@@ -409,19 +413,22 @@ def upper_bound(env: ArmolEnv) -> Dict:
     AP50; ties broken toward the cheaper subset (enumeration in increasing
     popcount order, strict improvement required).
 
-    Enumerates through the subset-evaluation cache: each image pays for its
-    IoU table once, every subset's ensemble is an O(1) slice + grouping,
-    and single-provider entries seed the memo for later callers.
+    Enumerates through the full-lattice path: each image pays for its IoU
+    table once, then ONE vectorized ``evaluate_lattice`` pass scores all
+    2^N - 1 subsets — the first-occurrence argmax over the popcount-ordered
+    AP rows reproduces the per-bitmask strict-improvement scan exactly,
+    and the lattice rows back-fill the memo for later callers.  This is
+    what makes the exact oracle reachable at N >= 10 rosters.
     """
     n = env.n_providers
-    masks = popcount_masks(n)
-    action_of = {m: mask_to_action(m, n) for m in masks}
+    action_of = {m: mask_to_action(m, n) for m in popcount_masks(n)}
     env.core.precompute(env.test_idx)
     dts, gts = {}, {}
     counts = np.zeros(n, np.int64)
     total_cost = 0.0
     for img in env.test_idx:
-        best_m, _ = env.core.best_subset(int(img), masks, against="gt")
+        lat = env.core.evaluate_lattice(int(img), against="gt")
+        best_m = int(lat.masks[int(np.argmax(lat.ap))])
         best_a = action_of[best_m]
         counts += (best_a > 0.5).astype(np.int64)
         total_cost += float(np.sum(env.costs * (best_a > 0.5)))

@@ -28,7 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.ensemble.boxes import Detections, iou_matrix
-from repro.ensemble.metrics import image_ap50
+from repro.ensemble.metrics import RECALL_POINTS, image_ap50
 from repro.ensemble.pipeline import (ensemble_from_arrays,
                                      merge_provider_detections,
                                      resolve_use_kernel)
@@ -62,6 +62,62 @@ def popcount_masks(n: int) -> List[int]:
         return int(sum(((m >> i) & 1) << (n - 1 - i) for i in range(n)))
     masks.sort(key=lambda m: (bin(m).count("1"), revbits(m)))
     return masks
+
+
+@dataclass
+class LatticeResult:
+    """Every subset's answer for one image: the full 2^N-1 lattice.
+
+    Rows follow ``popcount_masks(n)`` order (Algo.-2 enumeration: ascending
+    popcount, seed tie-break), so a first-occurrence argmax over ``ap``
+    reproduces ``best_subset``'s strict-improvement scan exactly.  Fused
+    detections for all subsets live in ONE set of concatenated arrays
+    sliced by ``offsets`` — ``detections(mask)`` rewraps a slice with
+    ``Detections.fast``, bit-identical to the per-bitmask path's output.
+    """
+    masks: np.ndarray       # (M,) int64 — popcount_masks order
+    row_of: np.ndarray      # (2^N,) int64 — mask -> row, -1 for mask 0
+    ap: np.ndarray          # (M,) float64 per-image AP50 vs ``against``
+    cost: np.ndarray        # (M,) float64 — the memoized cost() values
+    n_dets: np.ndarray      # (M,) int64 fused detections per subset
+    offsets: np.ndarray     # (M+1,) int64 slice bounds into the arrays below
+    boxes: np.ndarray       # (F, 4) float32
+    scores: np.ndarray      # (F,) float32
+    labels: np.ndarray      # (F,) int32
+    providers: np.ndarray   # (F,) int32 subset-relative provider ids
+    against: str
+
+    def __len__(self) -> int:
+        return len(self.masks)
+
+    def index_of(self, mask: int) -> int:
+        row = int(self.row_of[int(mask)])
+        if row < 0:
+            raise KeyError(f"mask {mask} not in lattice")
+        return row
+
+    def detections(self, mask: int) -> Detections:
+        lo, hi = self.slice_of(self.index_of(mask))
+        return Detections.fast(self.boxes[lo:hi], self.scores[lo:hi],
+                               self.labels[lo:hi], self.providers[lo:hi])
+
+    def slice_of(self, row: int) -> Tuple[int, int]:
+        return int(self.offsets[row]), int(self.offsets[row + 1])
+
+    def ap_of(self, mask: int) -> float:
+        return float(self.ap[self.index_of(mask)])
+
+    def to_wire(self) -> Tuple[np.ndarray, ...]:
+        """Flat array tuple for the serving shards' pipe (one lattice RPC
+        instead of 2^N-1 per-subset RPCs); rebuild with ``from_wire``."""
+        return (self.masks, self.row_of, self.ap, self.cost, self.n_dets,
+                self.offsets, self.boxes, self.scores, self.labels,
+                self.providers)
+
+    @classmethod
+    def from_wire(cls, wire: Sequence[np.ndarray],
+                  against: str) -> "LatticeResult":
+        return cls(*wire, against=against)
 
 
 @dataclass
@@ -105,8 +161,13 @@ class SubsetEvaluationCore:
         self._ens: Dict[Tuple[int, int], Detections] = {}
         self._ap: Dict[Tuple[int, int, str], float] = {}
         self._cost: Dict[int, float] = {}
+        self._lattice: Dict[Tuple[int, str], LatticeResult] = {}
+        self._lattice_order: Optional[np.ndarray] = None
+        self._lattice_row_of: Optional[np.ndarray] = None
+        self._lattice_cost: Optional[np.ndarray] = None
         self.stats = {"ens_hits": 0, "ens_misses": 0,
-                      "ap_hits": 0, "ap_misses": 0, "tables": 0}
+                      "ap_hits": 0, "ap_misses": 0, "tables": 0,
+                      "lattice_hits": 0, "lattice_misses": 0}
 
     # -- per-image table ------------------------------------------------
     def _full_iou(self, boxes: np.ndarray) -> np.ndarray:
@@ -176,12 +237,29 @@ class SubsetEvaluationCore:
             c = self._cost[mask] = float(np.sum(self.costs * bits))
         return c
 
+    def _lattice_row(self, img_idx: int) -> Optional[LatticeResult]:
+        """Any cached lattice for this image — fused detections are
+        ``against``-independent, so either reference's lattice serves."""
+        for against in ("gt", "pseudo"):
+            lat = self._lattice.get((img_idx, against))
+            if lat is not None:
+                return lat
+        return None
+
     def ensemble(self, img_idx: int, mask: int) -> Detections:
         key = (img_idx, mask)
         hit = self._ens.get(key)
         if hit is not None:
             self.stats["ens_hits"] += 1
             return hit
+        if mask:
+            lat = self._lattice_row(img_idx)
+            if lat is not None:
+                # lattice rows back-fill the per-bitmask memo on demand:
+                # warm-path callers see an ordinary cache hit
+                self.stats["ens_hits"] += 1
+                ens = self._ens[key] = lat.detections(mask)
+                return ens
         self.stats["ens_misses"] += 1
         if mask == 0:
             ens = Detections.empty()
@@ -215,6 +293,12 @@ class SubsetEvaluationCore:
         if hit is not None:
             self.stats["ap_hits"] += 1
             return hit
+        if mask:
+            lat = self._lattice.get((img_idx, against))
+            if lat is not None:
+                self.stats["ap_hits"] += 1
+                v = self._ap[key] = lat.ap_of(mask)
+                return v
         self.stats["ap_misses"] += 1
         ens = self.ensemble(img_idx, mask)
         v = (image_ap50(ens, self.reference(img_idx, against))
@@ -292,6 +376,10 @@ class SubsetEvaluationCore:
         state["_ens"] = {}
         state["_ap"] = {}
         state["_cost"] = {}
+        state["_lattice"] = {}
+        state["_lattice_order"] = None
+        state["_lattice_row_of"] = None
+        state["_lattice_cost"] = None
         state["stats"] = {k: 0 for k in self.stats}
         return state
 
@@ -318,11 +406,258 @@ class SubsetEvaluationCore:
                 best_v, best_m = v, m
         return best_m, best_v
 
+    # -- full-lattice evaluation -----------------------------------------
+    def lattice_masks(self) -> np.ndarray:
+        """All 2^N-1 subset masks in ``popcount_masks`` order (cached)."""
+        if self._lattice_order is None:
+            order = np.asarray(popcount_masks(self.n_providers), np.int64)
+            row_of = np.full(1 << self.n_providers, -1, np.int64)
+            row_of[order] = np.arange(len(order))
+            self._lattice_order, self._lattice_row_of = order, row_of
+        return self._lattice_order
+
+    def _lattice_costs(self) -> np.ndarray:
+        """(M,) per-row costs — the SAME memoized ``cost()`` floats the
+        per-bitmask path hands out, so lattice consumers composing
+        ap + beta * cost stay bit-identical to the loop path."""
+        if self._lattice_cost is None:
+            self._lattice_cost = np.asarray(
+                [self.cost(int(m)) for m in self.lattice_masks()],
+                np.float64)
+        return self._lattice_cost
+
+    def evaluate_lattice(self, img_idx: int, *,
+                         against: str = "gt") -> LatticeResult:
+        """Ensembles + AP50 + cost for ALL 2^N-1 subsets of one image in
+        one vectorized pass (memoized per (image, against)).
+
+        Subsets are laid out as a (2^N-1, N) bitmask matrix over the
+        image's shared table; grouping, voting, WBF and the AP50 matching
+        run as padded array ops with segment reductions over the subset
+        axis.  Every row is bit-identical to the per-bitmask path
+        (``ensemble`` / ``ap50``), and rows back-fill that memo lazily, so
+        warm-path semantics are unchanged.  Non-WBF ablations fall back to
+        the per-bitmask loop internally (same result shape).
+        """
+        img_idx = int(img_idx)
+        key = (img_idx, against)
+        hit = self._lattice.get(key)
+        if hit is not None:
+            self.stats["lattice_hits"] += 1
+            return hit
+        self.stats["lattice_misses"] += 1
+        prior = self._lattice_row(img_idx)
+        if prior is not None:
+            ens_part = (prior.n_dets, prior.offsets, prior.boxes,
+                        prior.scores, prior.labels, prior.providers)
+        elif self.ablation == "wbf":
+            ens_part = self._lattice_ensembles(img_idx)
+        else:
+            ens_part = self._lattice_ensembles_slow(img_idx)
+        ap = self._lattice_ap(img_idx, ens_part, against)
+        lat = LatticeResult(self.lattice_masks(), self._lattice_row_of,
+                            ap, self._lattice_costs(), *ens_part,
+                            against=against)
+        self._lattice[key] = lat
+        return lat
+
+    def _lattice_ensembles_slow(self, img_idx: int):
+        """Per-bitmask fallback (non-WBF ablations): still one call, still
+        a full lattice, just built through the memoized scalar path."""
+        rows = [self.ensemble(img_idx, int(m)) for m in self.lattice_masks()]
+        n_dets = np.asarray([len(r) for r in rows], np.int64)
+        offsets = np.concatenate([[0], np.cumsum(n_dets)])
+        if len(rows):
+            boxes = np.concatenate([r.boxes for r in rows], axis=0)
+            scores = np.concatenate([r.scores for r in rows])
+            labels = np.concatenate([r.labels for r in rows])
+            provs = np.concatenate(
+                [r.providers if r.providers is not None
+                 else np.zeros(len(r), np.int32) for r in rows])
+        else:       # pragma: no cover - n_providers >= 1 always
+            e = Detections.empty()
+            boxes, scores, labels, provs = e.boxes, e.scores, e.labels, \
+                e.providers
+        return n_dets, offsets, boxes, scores, labels, provs
+
+    def _lattice_ensembles(self, img_idx: int):
+        """Vectorized grouping + voting + WBF for every subset at once.
+
+        The greedy grouping visits the image's merged rows ONCE in the
+        full-table descending-score order (a subset's visit order is
+        exactly that order filtered to its rows), tracking per (subset,
+        row) representative flags and group ids; fusion then runs as one
+        ``np.add.reduceat`` over (subset, group, member)-sorted segments —
+        the same per-segment contents, in the same member order, as the
+        per-bitmask ``wbf`` call, hence bit-identical fused arrays.
+        """
+        t = self.table(img_idx)
+        masks = self.lattice_masks()
+        M = len(masks)
+        N = self.n_providers
+        bits = ((masks[:, None] >> np.arange(N)) & 1).astype(bool)  # (M, N)
+        popc = np.bitwise_count(masks)                              # (M,)
+        n_all = len(t.scores)
+        if n_all == 0:
+            return (np.zeros(M, np.int64),
+                    np.zeros(M + 1, np.int64),
+                    np.zeros((0, 4), np.float32), np.zeros(0, np.float32),
+                    np.zeros(0, np.int32), np.zeros(0, np.int32))
+        visit = np.argsort(-t.scores, kind="stable")
+        rank_of = np.empty(n_all, np.int64)
+        rank_of[visit] = np.arange(n_all)
+        # connectivity in float64, like the scalar greedy's tolist() floats
+        conn = np.equal.outer(t.labels, t.labels) & \
+            (t.iou.astype(np.float64) > float(self.iou_thr))
+        present = bits[:, t.row_provider]                   # (M, n_all)
+        rep = np.zeros((M, n_all), bool)
+        grp = np.zeros((M, n_all), np.int64)
+        n_groups = np.zeros(M, np.int64)
+        for pos, i in enumerate(visit):
+            seen = visit[:pos]
+            js = seen[conn[i, seen]]        # matching reps, creation order
+            has = present[:, i]
+            if len(js):
+                cand = rep[:, js]
+                anyc = cand.any(axis=1)
+                jsel = js[np.argmax(cand, axis=1)]
+                joins = np.flatnonzero(has & anyc)
+                grp[joins, i] = grp[joins, jsel[joins]]
+                creates = np.flatnonzero(has & ~anyc)
+            else:
+                creates = np.flatnonzero(has)
+            rep[creates, i] = True
+            grp[creates, i] = n_groups[creates]
+            n_groups[creates] += 1
+        # flatten to (subset, group, visit-rank) order: one reduceat pass
+        s_ids, i_ids = np.nonzero(present)
+        g_ids = grp[s_ids, i_ids]
+        order = np.lexsort((rank_of[i_ids], g_ids, s_ids))
+        fs, fg, fi = s_ids[order], g_ids[order], i_ids[order]
+        new_seg = np.empty(len(fs), bool)
+        new_seg[0] = True
+        new_seg[1:] = (fs[1:] != fs[:-1]) | (fg[1:] != fg[:-1])
+        starts = np.flatnonzero(new_seg)
+        sizes = np.diff(np.append(starts, len(fs)))
+        seg_s = fs[starts]                          # owning subset per group
+        sflat = t.scores[fi]
+        gsum = np.add.reduceat(sflat, starts)
+        denom = np.maximum(gsum.astype(np.float64), 1e-12).astype(np.float32)
+        gid_flat = np.repeat(np.arange(len(starts)), sizes)
+        w = sflat / denom[gid_flat]
+        fused = np.add.reduceat(t.boxes[fi] * w[:, None], starts, axis=0)
+        sc = (gsum / sizes.astype(np.float32)).astype(np.float64)
+        # distinct providers per group (T) for the WBF correction + voting
+        ormask = np.bitwise_or.reduceat(
+            np.left_shift(np.int64(1), t.row_provider[fi].astype(np.int64)),
+            starts)
+        T = np.bitwise_count(ormask)
+        nm = popc[seg_s]
+        sc = np.where(nm > 1, sc * (np.minimum(T, nm) / nm), sc)
+        first = fi[starts]
+        flabels = t.labels[first].astype(np.int32)
+        # subset-relative provider id of the first member, as ensemble()
+        # tags rows with their position in the selected subset
+        excl = np.cumsum(bits, axis=1) - bits               # (M, N)
+        fprovs = excl[seg_s, t.row_provider[first]].astype(np.int32)
+        if self.voting == "affirmative":
+            keep = slice(None)
+            kept_s = seg_s
+        else:
+            if self.voting == "consensus":
+                keep = np.flatnonzero(T > nm / 2.0)
+            elif self.voting == "unanimous":
+                keep = np.flatnonzero(T == nm)
+            else:
+                raise ValueError(self.voting)
+            kept_s = seg_s[keep]
+        n_dets = np.bincount(kept_s, minlength=M).astype(np.int64)
+        offsets = np.concatenate([[0], np.cumsum(n_dets)])
+        return (n_dets, offsets, fused.astype(np.float32)[keep],
+                sc.astype(np.float32)[keep], flabels[keep], fprovs[keep])
+
+    def _lattice_ap(self, img_idx: int, ens_part, against: str
+                    ) -> np.ndarray:
+        """(M,) per-image AP50 for every lattice row, mirroring
+        ``metrics._image_ap`` op for op (float64 scalars there, float64
+        lanes here; sequential adds become exact +0.0-padded lane adds)."""
+        n_dets, offsets, boxes, scores, labels, _ = ens_part
+        M = len(n_dets)
+        if against == "pseudo":
+            full_row = int(self._lattice_row_of[self.full_mask])
+            lo, hi = int(offsets[full_row]), int(offsets[full_row + 1])
+            ref = Detections.fast(boxes[lo:hi], scores[lo:hi],
+                                  labels[lo:hi], None)
+        else:
+            ref = self.reference(img_idx, against)
+        gt_labels = ref.labels
+        lab_list = sorted(set(gt_labels.tolist()))
+        acc = np.zeros(M, np.float64)
+        if not lab_list:
+            return acc
+        F = len(scores)
+        if F:
+            iou_all = iou_matrix(boxes, ref.boxes).astype(np.float64)
+            sub_of = np.repeat(np.arange(M), n_dets)
+        ranks = None
+        for lab in lab_list:
+            gi = np.flatnonzero(gt_labels == lab)
+            n_lab = len(gi)
+            sel = np.flatnonzero(labels == lab) if F else \
+                np.zeros(0, np.int64)
+            if len(sel) == 0:
+                continue                    # every lane adds exactly 0.0
+            sub_sel = sub_of[sel]
+            o = np.lexsort((np.arange(len(sel)),
+                            -scores[sel].astype(np.float64), sub_sel))
+            ssub = sub_sel[o]
+            counts = np.bincount(sub_sel, minlength=M)
+            offs = np.concatenate([[0], np.cumsum(counts)])
+            rank = np.arange(len(sel)) - offs[ssub]
+            K = int(counts.max())
+            P = np.full((M, K), -1, np.int64)
+            P[ssub, rank] = sel[o]
+            active = P >= 0
+            rows = np.where(active, P, 0)
+            taken = np.zeros((M, n_lab), bool)
+            tp = np.zeros((M, K), bool)
+            for r in range(K):
+                cand = np.where(taken, -1.0, iou_all[rows[:, r]][:, gi])
+                bj = n_lab - 1 - np.argmax(cand[:, ::-1], axis=1)
+                matched = active[:, r] & \
+                    (cand[np.arange(M), bj] >= 0.5)
+                mi = np.flatnonzero(matched)
+                taken[mi, bj[mi]] = True
+                tp[:, r] = matched
+            if ranks is None or len(ranks) < K:
+                ranks = np.arange(1, K + 1, dtype=np.int64)
+            tpc = np.cumsum(tp, axis=1).astype(np.int64)
+            prec = np.where(active, tpc / ranks[:K], 0.0)
+            prec = np.maximum.accumulate(prec[:, ::-1], axis=1)[:, ::-1]
+            recall = tpc / n_lab
+            inc = tp.copy()
+            inc[:, 0] = True
+            inc &= active
+            cnt = np.searchsorted(RECALL_POINTS, recall, side="right")
+            idxm = np.where(inc, np.arange(K)[None, :], -1)
+            last = np.maximum.accumulate(idxm, axis=1)
+            previdx = np.concatenate(
+                [np.full((M, 1), -1, np.int64), last[:, :-1]], axis=1)
+            prevcnt = np.where(
+                previdx >= 0,
+                np.take_along_axis(cnt, np.maximum(previdx, 0), axis=1), 0)
+            contrib = np.where(inc, prec * (cnt - prevcnt), 0.0)
+            apacc = np.zeros(M, np.float64)
+            for r in range(K):      # sequential adds (stable summation)
+                apacc = apacc + contrib[:, r]
+            acc = acc + apacc / len(RECALL_POINTS)
+        return acc / len(lab_list)
+
     def invalidate_images(self, img_indices: Sequence[int]) -> int:
         """Drop every cached artifact touching the given images (table,
-        ensembles, AP entries) — the hook for in-place trace mutation,
-        e.g. a scenario segment rewriting one provider's detections.
-        Returns the number of tables actually dropped."""
+        ensembles, AP entries, lattices) — the hook for in-place trace
+        mutation, e.g. a scenario segment rewriting one provider's
+        detections.  Returns the number of tables actually dropped."""
         drop = {int(i) for i in img_indices}
         dropped = 0
         for i in drop:
@@ -335,11 +670,16 @@ class SubsetEvaluationCore:
                 del self._ens[k]
             for k in [k for k in self._ap if k[0] in drop]:
                 del self._ap[k]
+            # lattice rows also back-fill _ens/_ap lazily: the lattice
+            # itself must go too, or a post-invalidation ensemble() would
+            # resurrect stale rows from it
+            for k in [k for k in self._lattice if k[0] in drop]:
+                del self._lattice[k]
         return dropped
 
     def cache_sizes(self) -> Dict[str, int]:
         return {"tables": len(self._tables), "ensembles": len(self._ens),
-                "ap_entries": len(self._ap)}
+                "ap_entries": len(self._ap), "lattices": len(self._lattice)}
 
     def config(self) -> Dict[str, object]:
         """The knobs that change ensemble output — enough to build an
@@ -427,6 +767,13 @@ class ShardedSubsetEvaluationCore:
     def ap50(self, img_idx: int, mask: int, *, against: str = "gt") -> float:
         return self.shard_of(img_idx).ap50(img_idx, mask, against=against)
 
+    def evaluate_lattice(self, img_idx: int, *,
+                         against: str = "gt") -> LatticeResult:
+        """Shard-local full-lattice evaluation: the image's home shard
+        computes (and caches) all 2^N-1 rows in one pass."""
+        return self.shard_of(img_idx).evaluate_lattice(img_idx,
+                                                       against=against)
+
     def cost(self, mask: int) -> float:
         # mask costs are image-independent; shard 0 is their (sole) home
         return self.shards[0].cost(mask)
@@ -448,10 +795,10 @@ class ShardedSubsetEvaluationCore:
 
     # -- aggregate introspection ----------------------------------------
     def cache_sizes(self) -> Dict[str, int]:
-        agg = {"tables": 0, "ensembles": 0, "ap_entries": 0}
+        agg: Dict[str, int] = {}
         for s in self.shards:
             for k, v in s.cache_sizes().items():
-                agg[k] += v
+                agg[k] = agg.get(k, 0) + v
         return agg
 
     @property

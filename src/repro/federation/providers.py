@@ -115,6 +115,29 @@ def scalability_providers() -> List[ProviderProfile]:
     return base + [ali] + synth
 
 
+def lattice_stress_providers(n: int = 12) -> List[ProviderProfile]:
+    """``n``-provider roster for full-lattice stress runs (N > 10).
+
+    Extends :func:`scalability_providers` with deterministic synthetic
+    services whose skill spreads mirror the Tab.-III synthetics, so an
+    N=12 exact oracle exercises 4095 subsets per image without inventing
+    a new calibration story.
+    """
+    roster = scalability_providers()
+    if n <= len(roster):
+        return roster[:n]
+    # same (recall, jitter, fp) palette as the Tab.-III synthetics,
+    # cycled deterministically — no RNG, rosters are reproducible
+    palette = [(0.72, 0.025, 0.40), (0.48, 0.045, 0.70),
+               (0.64, 0.030, 0.45), (0.36, 0.058, 0.85)]
+    for i in range(len(roster), n):
+        rec, jit, fp = palette[(i - len(roster)) % len(palette)]
+        roster.append(ProviderProfile(
+            name=f"mlaas{i}", base_recall=rec, box_jitter=jit,
+            fp_rate=fp, dialect=(i % 3), latency_ms=240.0 + 35 * i))
+    return roster
+
+
 def provider_names(profiles: List[ProviderProfile]) -> List[str]:
     return [p.name for p in profiles]
 

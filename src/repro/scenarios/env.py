@@ -116,6 +116,34 @@ class NonStationaryArmolEnv(ArmolEnv):
                                  out["ap50"] + self.beta * cost)
         return out
 
+    def evaluate_masks_at(self, img_indices: Sequence[int],
+                          masks: Sequence[int],
+                          step: int) -> Dict[str, np.ndarray]:
+        """Batched evaluation of explicit subset bitmasks under the
+        segment at ``step`` — the counterfactual-replay path: all
+        sub-subsets of a paid set are rows of ONE cached per-image
+        lattice slice, instead of per-(image, mask) memo round-trips.
+        Output contract matches ``evaluate_actions_at`` bit for bit.
+        """
+        view = self.pool.view_at(step)
+        core = self.pool.core_at(step)
+        imgs = [int(i) for i in img_indices]
+        m = np.asarray(masks, np.int64).reshape(-1)
+        ap = np.zeros(len(imgs), np.float64)
+        empty = np.zeros(len(imgs), bool)
+        core.precompute(imgs)
+        for t, (img, mk) in enumerate(zip(imgs, m)):
+            if mk == 0:
+                empty[t] = True
+                continue
+            lat = core.evaluate_lattice(img, against=self._against)
+            row = lat.index_of(int(mk))
+            ap[t] = lat.ap[row]
+            empty[t] = lat.n_dets[row] == 0
+        cost = view.mask_costs(m)
+        return {"reward": np.where(empty, -1.0, ap + self.beta * cost),
+                "ap50": np.where(empty, 0.0, ap), "cost": cost, "mask": m}
+
     def evaluate_actions(self, img_indices: Sequence[int],
                          actions: np.ndarray) -> Dict[str, np.ndarray]:
         return self.evaluate_actions_at(img_indices, actions, self._clock)

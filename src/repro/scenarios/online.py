@@ -170,9 +170,12 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
             b.state[:b.size, env._base_dim:] = status
             b.next_state[:b.size, env._base_dim:] = status
         if env.beta != 0.0:
-            masks = ((b.action[:b.size] > 0.5) * mask_w).sum(axis=1)
-            dc = env.beta * (new_view.mask_costs(masks)
-                             - old_view.mask_costs(masks))
+            # one fee matvec over the whole bitmask matrix: fee deltas for
+            # every stored action in a single pass, no per-bitmask
+            # cost re-derivation
+            bits = (b.action[:b.size] > 0.5).astype(np.float64)
+            dc = env.beta * (bits @ (new_view.costs.astype(np.float64)
+                                     - old_view.costs.astype(np.float64)))
             keep = b.reward[:b.size] != -1.0     # Eq.-5 empties stay -1
             b.reward[:b.size][keep] += dc[keep].astype(np.float32)
 
@@ -239,7 +242,7 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
         nxt, r, dones, infos, carry = env.step_lanes(acts)
         buf.add_batch(states, acts, r, nxt, dones.astype(np.float32))
         if counterfactual_k > 0:
-            cf_s, cf_a, cf_img, cf_n, cf_d = [], [], [], [], []
+            cf_s, cf_a, cf_m, cf_img, cf_n, cf_d = [], [], [], [], [], []
             for lane in range(lanes):
                 sel = np.flatnonzero(acts[lane] > 0.5)
                 if len(sel) < 2:
@@ -252,12 +255,15 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
                     a_cf[keep] = 1.0
                     cf_s.append(states[lane])
                     cf_a.append(a_cf)
+                    cf_m.append(int(mask_w[keep].sum()))
                     cf_img.append(int(infos["image"][lane]))
                     cf_n.append(nxt[lane])
                     cf_d.append(float(dones[lane]))
             if cf_a:
-                out_cf = env.evaluate_actions_at(cf_img, np.stack(cf_a),
-                                                 step0)
+                # sub-subset rewards are lattice row-slices of the paid
+                # set's image — one cached pass per image, no
+                # per-(image, mask) evaluation round-trips
+                out_cf = env.evaluate_masks_at(cf_img, cf_m, step0)
                 buf.add_batch(np.stack(cf_s), np.stack(cf_a),
                               out_cf["reward"], np.stack(cf_n),
                               np.asarray(cf_d, np.float32))

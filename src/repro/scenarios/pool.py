@@ -35,8 +35,7 @@ import numpy as np
 
 from repro.ensemble.boxes import Detections
 from repro.federation.evaluation import (ShardedSubsetEvaluationCore,
-                                         SubsetEvaluationCore,
-                                         popcount_masks)
+                                         SubsetEvaluationCore)
 from repro.federation.providers import ProviderProfile
 from repro.federation.traces import (RawDetections, TraceSet,
                                      generate_traces, provider_detections)
@@ -189,6 +188,7 @@ class DynamicProviderPool:
         self._sharded: Dict[Tuple, ShardedSubsetEvaluationCore] = {}
         self._snapshots: Dict[int, PoolSnapshot] = {}
         self._oracle: Dict[Tuple, Tuple[int, float]] = {}
+        self._fees: Dict[Tuple, np.ndarray] = {}
         self.stats = {"segments_built": 0, "cores_built": 0,
                       "cores_reused": 0, "providers_regenerated": 0}
 
@@ -327,15 +327,36 @@ class DynamicProviderPool:
         return w / w.sum()
 
     # -- per-segment oracle ----------------------------------------------
+    def _segment_fees(self, view: PoolView,
+                      masks: np.ndarray) -> np.ndarray:
+        """(M,) summed segment fees per lattice row, memoized per fee
+        vector.  Accumulated column by column in ascending provider order
+        (adding an exact 0.0 for unset bits), so each row equals the old
+        per-bitmask python sum of set-bit fees to the last float64 bit."""
+        fee_key = tuple(view.costs.tolist())
+        hit = self._fees.get(fee_key)
+        if hit is not None:
+            return hit
+        bits = (masks[:, None] >> np.arange(self.n_providers)) & 1
+        bc = view.costs.astype(np.float64)
+        fee = np.zeros(len(masks), np.float64)
+        for p in range(self.n_providers):
+            fee = fee + bits[:, p] * bc[p]
+        self._fees[fee_key] = fee
+        return fee
+
     def oracle(self, img_idx: int, step: int, beta: float, *,
                against: str = "gt") -> Tuple[int, float]:
         """(best mask, best reward) for one image under one segment.
 
-        Enumerates the subsets of the segment's ACTIVE providers in
-        popcount order with strict improvement (Algo.-2 tie-breaking:
-        cheaper subsets win ties), rewarding ap50 + beta * segment fees
-        and -1 for an empty ensemble.  Memoized per (segment economics,
-        beta, image); the AP50 lookups ride the segment core's memo.
+        One masked slice of the image's full lattice: rows overlapping
+        inactive providers or fusing to an empty ensemble are masked out,
+        rewards compose as ap50 + beta * segment fees over the whole
+        lattice at once, and the first-occurrence argmax over the
+        popcount-ordered rows keeps the Algo.-2 tie-breaking (cheaper
+        subsets win ties).  Memoized per (segment economics, beta, image);
+        the lattice itself is memoized per (image, against) on the
+        segment core.
         """
         view = self.view_at(step)
         key = (view.econ_key, round(float(beta), 12), int(img_idx), against)
@@ -343,19 +364,16 @@ class DynamicProviderPool:
         if hit is not None:
             return hit
         core = self.core_at(step)
-        amask = view.active_mask
+        lat = core.evaluate_lattice(int(img_idx), against=against)
+        valid = ((lat.masks & ~view.active_mask) == 0) & (lat.n_dets > 0)
         best_m, best_r = 0, -1.0
-        bit_costs = view.costs.astype(np.float64)
-        for m in popcount_masks(self.n_providers):
-            if m & ~amask:
-                continue
-            if len(core.ensemble(img_idx, m)) == 0:
-                continue
-            c = float(sum(bit_costs[i]
-                          for i in range(self.n_providers) if m >> i & 1))
-            r = core.ap50(img_idx, m, against=against) + beta * c
-            if r > best_r:
-                best_m, best_r = m, r
+        if valid.any():
+            r = np.where(valid,
+                         lat.ap + beta * self._segment_fees(view, lat.masks),
+                         -np.inf)
+            i = int(np.argmax(r))
+            if r[i] > -1.0:     # strict improvement over the empty action
+                best_m, best_r = int(lat.masks[i]), float(r[i])
         self._oracle[key] = (best_m, best_r)
         return best_m, best_r
 

@@ -42,7 +42,8 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.ensemble.boxes import Detections
-from repro.federation.evaluation import (SubsetEvaluationCore,
+from repro.federation.evaluation import (LatticeResult,
+                                         SubsetEvaluationCore,
                                          action_to_mask)
 from repro.federation.traces import TraceSet
 
@@ -84,6 +85,13 @@ def _worker_main(conn, traces: TraceSet,
                 _, img, mask, against, key = msg
                 conn.send(("ok", cores[key].ap50(img, mask,
                                                  against=against)))
+            elif op == "lattice":
+                # ONE RPC answers every subset of the image: the worker
+                # runs the vectorized full-lattice pass and ships the
+                # concatenated row arrays (LatticeResult.to_wire)
+                _, img, against, key = msg
+                conn.send(("ok", cores[key].evaluate_lattice(
+                    img, against=against).to_wire()))
             elif op == "precompute":
                 _, imgs, key = msg
                 cores[key].precompute(imgs)
@@ -346,6 +354,20 @@ class ProcessShardedSubsetEvaluationCore:
             return float(self._rpc_locked(
                 sid, ("ap", int(img_idx), int(mask), against, key)))
 
+    def evaluate_lattice(self, img_idx: int, *, against: str = "gt",
+                         snapshot=None) -> LatticeResult:
+        """All 2^N-1 subset rows of one image in ONE pipe round-trip: the
+        image's home worker runs the vectorized lattice pass (cached
+        worker-side per (image, against)) and answers with the wire
+        arrays; the parent rewraps them without copying."""
+        sid = self.shard_id(img_idx)
+        with self._locks[sid]:
+            key = None if snapshot is None else \
+                self._ensure_installed_locked(sid, snapshot)
+            wire = self._rpc_locked(
+                sid, ("lattice", int(img_idx), against, key))
+        return LatticeResult.from_wire(wire, against)
+
     def cost(self, mask: int) -> float:
         # mask costs are image-independent config, not cache state: answer
         # locally instead of a pipe round-trip
@@ -376,10 +398,10 @@ class ProcessShardedSubsetEvaluationCore:
                 for sid in range(self.n_shards)]
 
     def cache_sizes(self) -> Dict[str, int]:
-        agg = {"tables": 0, "ensembles": 0, "ap_entries": 0}
+        agg: Dict[str, int] = {}
         for rep in self._introspect():
             for k, v in rep["cache_sizes"].items():
-                agg[k] += v
+                agg[k] = agg.get(k, 0) + v
         return agg
 
     @property

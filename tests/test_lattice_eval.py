@@ -1,0 +1,226 @@
+"""Parity tests: the full-lattice pass (``evaluate_lattice``) must
+reproduce the memoized per-bitmask path bit for bit — every subset's
+fused detection arrays, AP50, and cost — across voting variants, both
+references, empty ensembles, invalidation, and the sharded backends.
+
+The lattice and loop answers are compared on SEPARATE cores so no memo
+sharing can mask a divergence; the back-fill tests then check the
+sharing on purpose.  A hypothesis-driven twin of this suite lives in
+``test_lattice_eval_fuzz.py`` (random rosters and op orders).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.federation.env import ArmolEnv  # noqa: E402
+from repro.federation.evaluation import (  # noqa: E402
+    ShardedSubsetEvaluationCore, SubsetEvaluationCore, popcount_masks)
+from repro.federation.providers import (  # noqa: E402
+    ProviderProfile, default_providers, lattice_stress_providers)
+from repro.federation.traces import generate_traces  # noqa: E402
+
+TR3 = generate_traces(default_providers(), 12, seed=7)
+TR6 = generate_traces(lattice_stress_providers(6), 6, seed=5)
+
+
+def assert_lattice_matches_loop(lat_core, loop_core, img, *,
+                                against="gt"):
+    """Every row of the lattice == the per-bitmask path, bit for bit."""
+    lat = lat_core.evaluate_lattice(img, against=against)
+    masks = popcount_masks(loop_core.n_providers)
+    assert lat.masks.tolist() == masks
+    for m in masks:
+        a = lat.detections(m)
+        b = loop_core.ensemble(img, m)
+        assert a.boxes.dtype == b.boxes.dtype
+        assert a.scores.dtype == b.scores.dtype
+        np.testing.assert_array_equal(a.boxes, b.boxes)
+        np.testing.assert_array_equal(a.scores, b.scores)
+        np.testing.assert_array_equal(a.labels, b.labels)
+        np.testing.assert_array_equal(a.providers, b.providers)
+        assert lat.n_dets[lat.index_of(m)] == len(b)
+        assert lat.ap_of(m) == loop_core.ap50(img, m, against=against)
+        assert lat.cost[lat.index_of(m)] == loop_core.cost(m)
+
+
+# ---------------------------------------------------------------------------
+# row-level parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("against", ["gt", "pseudo"])
+def test_all_rows_match_loop_n6(against):
+    lat_core = SubsetEvaluationCore(TR6)
+    loop_core = SubsetEvaluationCore(TR6)
+    for img in range(len(TR6)):
+        assert_lattice_matches_loop(lat_core, loop_core, img,
+                                    against=against)
+
+
+@pytest.mark.parametrize("voting", ["consensus", "unanimous"])
+def test_voting_variants_match_loop(voting):
+    lat_core = SubsetEvaluationCore(TR3, voting=voting)
+    loop_core = SubsetEvaluationCore(TR3, voting=voting)
+    for img in range(len(TR3)):
+        assert_lattice_matches_loop(lat_core, loop_core, img)
+
+
+def test_non_wbf_ablation_falls_back_and_matches():
+    """Only the wbf fusion recipe is vectorized; other ablations must
+    still answer — through the per-mask fallback — identically."""
+    lat_core = SubsetEvaluationCore(TR3, ablation="nms")
+    loop_core = SubsetEvaluationCore(TR3, ablation="nms")
+    for img in range(4):
+        assert_lattice_matches_loop(lat_core, loop_core, img)
+
+
+def test_empty_and_silent_provider_rows():
+    """Subsets of providers that detected nothing yield empty rows with
+    AP 0 — same as the loop path — and a fully silent roster yields an
+    all-empty lattice without tripping the vectorized pass."""
+    mute = ProviderProfile(name="mute", base_recall=0.0, fp_rate=0.0)
+    tr = generate_traces(default_providers() + [mute], 6, seed=3)
+    lat_core = SubsetEvaluationCore(tr)
+    loop_core = SubsetEvaluationCore(tr)
+    mute_mask = 1 << 3
+    for img in range(len(tr)):
+        assert_lattice_matches_loop(lat_core, loop_core, img)
+        lat = lat_core.evaluate_lattice(img)
+        assert lat.n_dets[lat.index_of(mute_mask)] == 0
+        assert len(lat.detections(mute_mask)) == 0
+        assert lat.ap_of(mute_mask) == 0.0
+
+    tr_silent = generate_traces([mute, mute.replace(name="mute2")], 3,
+                                seed=3)
+    lat = SubsetEvaluationCore(tr_silent).evaluate_lattice(0)
+    assert lat.n_dets.sum() == 0
+    assert np.all(lat.ap == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# memo sharing: back-fill and invalidation
+# ---------------------------------------------------------------------------
+
+def test_lattice_backfills_per_mask_memo_as_hits():
+    core = SubsetEvaluationCore(TR3)
+    core.evaluate_lattice(0)
+    misses = (core.stats["ens_misses"], core.stats["ap_misses"])
+    ref = SubsetEvaluationCore(TR3)
+    for m in popcount_masks(TR3.n_providers):
+        assert core.ap50(0, m) == ref.ap50(0, m)
+        a, b = core.ensemble(0, m), ref.ensemble(0, m)
+        np.testing.assert_array_equal(a.boxes, b.boxes)
+        np.testing.assert_array_equal(a.scores, b.scores)
+    # every per-mask answer came from the lattice: hits, not recomputes
+    n_masks = len(popcount_masks(TR3.n_providers))
+    assert (core.stats["ens_misses"], core.stats["ap_misses"]) == misses
+    assert core.stats["ens_hits"] >= n_masks
+    assert core.stats["ap_hits"] >= n_masks
+
+
+def test_invalidate_drops_lattice_and_recomputes_identically():
+    core = SubsetEvaluationCore(TR3)
+    lat = core.evaluate_lattice(2)
+    before = (lat.ap.copy(), lat.boxes.copy(), lat.offsets.copy())
+    assert core.cache_sizes()["lattices"] == 1
+    core.invalidate_images([2])
+    # the lattice row AND its back-fill source are gone: a stale lattice
+    # surviving here would resurrect dropped per-mask entries
+    assert core.cache_sizes()["lattices"] == 0
+    lat2 = core.evaluate_lattice(2)
+    np.testing.assert_array_equal(lat2.ap, before[0])
+    np.testing.assert_array_equal(lat2.boxes, before[1])
+    np.testing.assert_array_equal(lat2.offsets, before[2])
+
+
+def test_lattice_is_memoized_per_against():
+    core = SubsetEvaluationCore(TR3)
+    a = core.evaluate_lattice(1, against="gt")
+    assert core.evaluate_lattice(1, against="gt") is a
+    b = core.evaluate_lattice(1, against="pseudo")
+    assert b is not a
+    # the fused arrays are reference-independent and shared across the
+    # two lattices; only the AP column differs
+    assert b.boxes is a.boxes
+    assert core.cache_sizes()["lattices"] == 2
+
+
+def test_wire_roundtrip():
+    lat = SubsetEvaluationCore(TR3).evaluate_lattice(0)
+    from repro.federation.evaluation import LatticeResult
+    back = LatticeResult.from_wire(lat.to_wire(), lat.against)
+    np.testing.assert_array_equal(back.ap, lat.ap)
+    np.testing.assert_array_equal(back.boxes, lat.boxes)
+    assert back.detections(3).scores.tolist() == \
+        lat.detections(3).scores.tolist()
+
+
+# ---------------------------------------------------------------------------
+# consumers: upper bound / oracle argmax over lattice rows
+# ---------------------------------------------------------------------------
+
+def test_argmax_row_equals_best_subset_scan():
+    """popcount-order rows + first-occurrence argmax == the Algo.-2
+    first-strict-improvement scan, including its cheapest-wins ties."""
+    lat_core = SubsetEvaluationCore(TR6)
+    loop_core = SubsetEvaluationCore(TR6)
+    masks = popcount_masks(TR6.n_providers)
+    for img in range(len(TR6)):
+        lat = lat_core.evaluate_lattice(img)
+        i = int(np.argmax(lat.ap))
+        m, v = loop_core.best_subset(img, masks)
+        assert (int(lat.masks[i]), float(lat.ap[i])) == (m, v)
+
+
+def test_upper_bound_runs_at_n12():
+    """The exact oracle at 4095 subsets/image — the regime the lattice
+    unlocks — completes and its AP dominates the full ensemble."""
+    from repro.core.loops import (ensembleN_policy, evaluate_policy,
+                                  upper_bound)
+    tr = generate_traces(lattice_stress_providers(12), 8, seed=1)
+    env = ArmolEnv(tr, mode="gt", beta=0.0, seed=1)
+    ub = upper_bound(env)
+    full = evaluate_policy(ensembleN_policy(env), env)
+    assert ub["ap50"] >= full["ap50"]
+    assert ub["cost"] <= full["cost"]
+
+
+# ---------------------------------------------------------------------------
+# sharded backends
+# ---------------------------------------------------------------------------
+
+def test_thread_sharded_delegates_to_home_shard():
+    ref = SubsetEvaluationCore(TR3)
+    cut = ShardedSubsetEvaluationCore(TR3, n_shards=3)
+    for img in (0, 4, 11):
+        a = cut.evaluate_lattice(img)
+        b = ref.evaluate_lattice(img)
+        np.testing.assert_array_equal(a.ap, b.ap)
+        np.testing.assert_array_equal(a.boxes, b.boxes)
+        np.testing.assert_array_equal(a.offsets, b.offsets)
+    assert cut.cache_sizes()["lattices"] == 3
+
+
+@pytest.mark.slow
+def test_process_shard_lattice_rpc_parity():
+    """One lattice RPC per image over the worker pipe must equal the
+    in-process answer — masks, AP, cost, and the fused arrays."""
+    from repro.serving.mp_shards import ProcessShardedSubsetEvaluationCore
+    ref = SubsetEvaluationCore(TR3)
+    with ProcessShardedSubsetEvaluationCore(TR3, n_shards=2) as cut:
+        for img in (0, 1, 7):
+            for against in ("gt", "pseudo"):
+                a = cut.evaluate_lattice(img, against=against)
+                b = ref.evaluate_lattice(img, against=against)
+                np.testing.assert_array_equal(a.masks, b.masks)
+                np.testing.assert_array_equal(a.ap, b.ap)
+                np.testing.assert_array_equal(a.cost, b.cost)
+                np.testing.assert_array_equal(a.offsets, b.offsets)
+                np.testing.assert_array_equal(a.boxes, b.boxes)
+                np.testing.assert_array_equal(a.scores, b.scores)
+                np.testing.assert_array_equal(a.labels, b.labels)
+                np.testing.assert_array_equal(a.providers, b.providers)
+        # invalidation must reach the workers' lattice rows too
+        cut.invalidate_images([0])
+        assert cut.cache_sizes()["lattices"] == \
+            ref.cache_sizes()["lattices"] - 2

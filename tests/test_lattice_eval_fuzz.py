@@ -1,0 +1,99 @@
+"""Property tests: lattice-vs-loop parity under random rosters (N <= 8),
+random mask samples, silent providers, and interleaved invalidations —
+the hypothesis-driven twin of ``test_lattice_eval.py``."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+pytest.importorskip("jax")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.federation.evaluation import (  # noqa: E402
+    SubsetEvaluationCore, popcount_masks)
+from repro.federation.providers import (  # noqa: E402
+    ProviderProfile, lattice_stress_providers)
+from repro.federation.traces import generate_traces  # noqa: E402
+
+N_IMAGES = 5
+_MUTE = ProviderProfile(name="mute", base_recall=0.0, fp_rate=0.0)
+
+# pregenerated rosters (per-example trace generation would dominate the
+# run): plain stress rosters at N in {2, 4, 6, 8} plus one with a silent
+# provider, so empty-ensemble rows are always in the sampled population
+TRS = {n: generate_traces(lattice_stress_providers(n), N_IMAGES, seed=n)
+       for n in (2, 4, 6, 8)}
+TRS["mute4"] = generate_traces(
+    lattice_stress_providers(3) + [_MUTE], N_IMAGES, seed=13)
+
+
+@settings(max_examples=30, deadline=None)
+@given(roster=st.sampled_from(sorted(TRS, key=str)),
+       img=st.integers(0, N_IMAGES - 1),
+       against=st.sampled_from(["gt", "pseudo"]),
+       picks=st.lists(st.integers(0, 10 ** 9), min_size=1, max_size=10),
+       inv_first=st.booleans())
+def test_lattice_rows_bit_identical(roster, img, against, picks,
+                                    inv_first):
+    tr = TRS[roster]
+    lat_core = SubsetEvaluationCore(tr)
+    loop_core = SubsetEvaluationCore(tr)
+    if inv_first:
+        # a dropped-and-rebuilt lattice must answer like a fresh one
+        lat_core.evaluate_lattice(img, against=against)
+        lat_core.invalidate_images([img])
+    lat = lat_core.evaluate_lattice(img, against=against)
+    full = (1 << tr.n_providers) - 1
+    for p in picks:
+        m = 1 + (p % full)
+        a = lat.detections(m)
+        b = loop_core.ensemble(img, m)
+        np.testing.assert_array_equal(a.boxes, b.boxes)
+        np.testing.assert_array_equal(a.scores, b.scores)
+        np.testing.assert_array_equal(a.labels, b.labels)
+        np.testing.assert_array_equal(a.providers, b.providers)
+        assert lat.ap_of(m) == loop_core.ap50(img, m, against=against)
+        assert lat.cost[lat.index_of(m)] == loop_core.cost(m)
+
+
+@settings(max_examples=20, deadline=None)
+@given(img=st.integers(0, N_IMAGES - 1),
+       drop=st.lists(st.integers(0, N_IMAGES - 1), min_size=1,
+                     max_size=4),
+       picks=st.lists(st.integers(0, 10 ** 9), min_size=1, max_size=6))
+def test_backfilled_memo_survives_invalidation_correctly(img, drop,
+                                                         picks):
+    """Back-filled per-mask entries and the lattice they came from drop
+    TOGETHER; recomputation after the drop is loss-free."""
+    tr = TRS[4]
+    core = SubsetEvaluationCore(tr)
+    core.evaluate_lattice(img)
+    full = (1 << tr.n_providers) - 1
+    masks = [1 + (p % full) for p in picks]
+    before = {m: core.ap50(img, m) for m in masks}
+    core.invalidate_images(drop)
+    if img in drop:
+        assert all(k[0] != img for k in core._lattice)
+    for m in masks:
+        assert core.ap50(img, m) == before[m]
+
+
+@pytest.mark.slow
+@settings(max_examples=4, deadline=None)
+@given(img=st.integers(0, N_IMAGES - 1),
+       voting=st.sampled_from(["affirmative", "consensus", "unanimous"]),
+       against=st.sampled_from(["gt", "pseudo"]))
+def test_every_row_matches_at_n8(img, voting, against):
+    """All 255 rows, every array, exact floats — the exhaustive check at
+    the largest fuzzed N."""
+    tr = TRS[8]
+    lat_core = SubsetEvaluationCore(tr, voting=voting)
+    loop_core = SubsetEvaluationCore(tr, voting=voting)
+    lat = lat_core.evaluate_lattice(img, against=against)
+    for m in popcount_masks(tr.n_providers):
+        a = lat.detections(m)
+        b = loop_core.ensemble(img, m)
+        np.testing.assert_array_equal(a.boxes, b.boxes)
+        np.testing.assert_array_equal(a.scores, b.scores)
+        np.testing.assert_array_equal(a.labels, b.labels)
+        np.testing.assert_array_equal(a.providers, b.providers)
+        assert lat.ap_of(m) == loop_core.ap50(img, m, against=against)

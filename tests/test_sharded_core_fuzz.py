@@ -18,6 +18,7 @@ N = TR.n_providers
 ALL_MASKS = list(range(1, 1 << N))
 
 # op stream: ("ap", img, mask) | ("ens", img, mask) | ("inv", [imgs])
+#          | ("lat", img, against)
 _op = st.one_of(
     st.tuples(st.just("ap"), st.integers(0, len(TR) - 1),
               st.sampled_from(ALL_MASKS)),
@@ -26,6 +27,8 @@ _op = st.one_of(
     st.tuples(st.just("inv"),
               st.lists(st.integers(0, len(TR) - 1), min_size=1,
                        max_size=6)),
+    st.tuples(st.just("lat"), st.integers(0, len(TR) - 1),
+              st.sampled_from(["gt", "pseudo"])),
 )
 
 
@@ -42,6 +45,18 @@ def test_sharded_matches_unsharded_under_invalidations(n_shards, ops):
             assert dropped_ref == dropped_cut
         elif op[0] == "ap":
             assert cut.ap50(op[1], op[2]) == ref.ap50(op[1], op[2])
+        elif op[0] == "lat":
+            # full-lattice rows must survive interleaved invalidations:
+            # a stale back-filled row resurrecting here would desync the
+            # sharded and unsharded answers
+            a = cut.evaluate_lattice(op[1], against=op[2])
+            b = ref.evaluate_lattice(op[1], against=op[2])
+            np.testing.assert_array_equal(a.masks, b.masks)
+            np.testing.assert_array_equal(a.ap, b.ap)
+            np.testing.assert_array_equal(a.cost, b.cost)
+            np.testing.assert_array_equal(a.offsets, b.offsets)
+            np.testing.assert_array_equal(a.boxes, b.boxes)
+            np.testing.assert_array_equal(a.scores, b.scores)
         else:
             a, b = cut.ensemble(op[1], op[2]), ref.ensemble(op[1], op[2])
             np.testing.assert_array_equal(a.boxes, b.boxes)

@@ -263,7 +263,8 @@ def test_pickled_core_arrives_cold_and_answers_identically():
     blob = pickle.dumps(core)
     clone = pickle.loads(blob)
     assert clone.cache_sizes() == {"tables": 0, "ensembles": 0,
-                                   "ap_entries": 0}         # arrives cold
+                                   "ap_entries": 0,
+                                   "lattices": 0}           # arrives cold
     assert all(v == 0 for v in clone.stats.values())
     for (i, m), want in warm.items():
         assert clone.ap50(i, m) == want

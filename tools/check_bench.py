@@ -71,6 +71,11 @@ class Gate:
 # from the caller's environment).
 GATES = {
     "subset_cache": [Gate("speedup_warm"), Gate("speedup_cold")],
+    # full-lattice pass vs the per-bitmask loop, both cold, same run:
+    # the ratio cancels machine speed.  N=5 is reported but not gated —
+    # at 31 subsets the vectorized pass has little to amortize and its
+    # ratio is the noisiest of the three
+    "lattice": [Gate("speedup_n7"), Gate("speedup_n10")],
     "serving": [Gate("speedup_async_vs_handle"),
                 Gate("speedup_many_vs_handle")],
     "train_driver": [Gate("offpolicy.speedup"), Gate("ppo.speedup")],
@@ -99,6 +104,8 @@ GATES = {
 
 BENCH_ENV = {
     "subset_cache": {"REPRO_BENCH_IMAGES": "50"},
+    "lattice": {"REPRO_BENCH_IMAGES": "12",
+                "REPRO_BENCH_ROUNDS": "3"},
     "serving": {"REPRO_BENCH_IMAGES": "50"},
     "train_driver": {"REPRO_BENCH_IMAGES": "120"},
     "scenarios": {"REPRO_BENCH_IMAGES": "120",

@@ -7,8 +7,9 @@
 #   tools/ci.sh --hygiene  hygiene + smoke bench    (matrix job: hygiene)
 #   tools/ci.sh --full     everything: slow driver/serving tests + the
 #                          benchmark regression gates (tools/check_bench.py
-#                          compares fresh subset_cache/serving/train_driver/
-#                          scenarios/serving_mp/serving_scenarios numbers
+#                          compares fresh subset_cache/lattice/serving/
+#                          train_driver/scenarios/serving_mp/
+#                          serving_scenarios numbers
 #                          against the committed benchmarks/results/*.json
 #                          baselines; REPRO_BENCH_TOLERANCE overrides the
 #                          30% gate on noisy runners)
@@ -71,6 +72,10 @@ def guarded_suite(pattern, why, *, require_slow_when=None):
 
 guarded_suite("test_scenarios*.py", "scenario suite",
               require_slow_when=lambda src: "run_online" in src)
+# the lattice parity suite property-tests all 2^N - 1 subsets per draw
+# and spins up process shards for the wire-contract case: jax must be
+# guarded and the process-backend cases slow-marked
+guarded_suite("test_lattice_eval*.py", "lattice parity suite")
 # multi-process serving suites spawn worker processes (seconds each on
 # the spawn context): slow-marked wholesale, nightly --full runs them
 guarded_suite("test_serving_mp*.py", "process-shard serving suite")
@@ -93,8 +98,8 @@ fi
 
 if [[ "$FULL" == 1 ]]; then
     echo "== benchmark regression gates (fresh vs committed baselines) =="
-    python tools/check_bench.py subset_cache serving train_driver \
-        scenarios serving_mp serving_scenarios
+    python tools/check_bench.py subset_cache lattice serving \
+        train_driver scenarios serving_mp serving_scenarios
 elif [[ "$HYGIENE" == 1 ]]; then
     echo "== subset-cache smoke benchmark (50 images) =="
     # scratch results dir: the committed baselines under benchmarks/
