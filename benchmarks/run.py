@@ -455,20 +455,23 @@ def bench_train_driver():
               start_steps=burn, update_after=burn, update_every=50,
               update_iters=10, log=None, seed=0)
 
-    def timed(driver, agent_fn, **dkw):
+    def timed(driver, agent_fn, buffer_fn=None, **dkw):
         """Replay the driver with identical seeds: the first pass jits
         every shape and memoizes the exact (image, mask) stream the
         deterministic seeds repeat; the later passes measure steady-state
         driver throughput (min of 3 — this is a shared, noisy machine).
         The per-epoch test-episode evaluation is timed separately and
         subtracted: it is the identical epilogue on both paths, not part
-        of the experience-collection/update loop under comparison."""
+        of the experience-collection/update loop under comparison.
+        ``buffer_fn`` builds a fresh replay buffer per pass (buffers are
+        stateful, so passes must not share one)."""
         from repro.core.loops import agent_policy, evaluate_policy
         dt = float("inf")
         for i in range(4):
             env.rng = np.random.default_rng(41)
+            kw_i = dict(dkw, buffer=buffer_fn()) if buffer_fn else dkw
             t0 = time.time()
-            hist = driver(agent_fn(), env, **dkw)
+            hist = driver(agent_fn(), env, **kw_i)
             if i > 0:
                 dt = min(dt, time.time() - t0)
             agent = agent_fn.last
@@ -484,11 +487,44 @@ def bench_train_driver():
             self.last = self.fn()
             return self.last
 
+    def timed_lanes(driver, agent_fn, variants, **dkw):
+        """Like ``timed`` but interleaves passes of several buffer
+        variants of the same driver, so a transient load spike on this
+        shared machine hits all variants instead of biasing whichever
+        one it landed on — the host-vs-device ratio is the gated metric
+        and must not depend on measurement order."""
+        from repro.core.loops import agent_policy, evaluate_policy
+        dts = [float("inf")] * len(variants)
+        hists = [None] * len(variants)
+        for i in range(4):
+            for j, buffer_fn in enumerate(variants):
+                env.rng = np.random.default_rng(41)
+                kw_i = dict(dkw, buffer=buffer_fn()) if buffer_fn else dkw
+                t0 = time.time()
+                hists[j] = driver(agent_fn(), env, **kw_i)
+                if i > 0:
+                    dts[j] = min(dts[j], time.time() - t0)
+        agent = agent_fn.last
+        ev = min(_best_of(lambda: evaluate_policy(agent_policy(agent),
+                                                  env)), min(dts) / 2)
+        e = dkw.get("epochs", 1)
+        return [(h, dt - e * ev) for h, dt in zip(hists, dts)]
+
+    # device-resident lane: jax-PRNG index draws, on-device feature
+    # assembly from the env's feature table, no per-block metric sync
+    def dev_buf():
+        from repro.core.device_replay import DeviceReplayBuffer
+        return DeviceReplayBuffer(100_000, env.state_dim, env.n_providers,
+                                  seed=0, index_mode="jax",
+                                  feature_table=env.device_features())
+
     sac, ppo = _remember(sac), _remember(ppo)
     h_seq, seq_s = timed(run_offpolicy_sequential, sac, **kw)
-    h_bat, bat_s = timed(run_off_policy, sac, lanes=lanes, **kw)
+    (h_bat, bat_s), (h_dev, dev_s) = timed_lanes(
+        run_off_policy, sac, [None, dev_buf], lanes=lanes, **kw)
     sps_seq = h_seq[-1]["steps"] / max(seq_s, 1e-9)
     sps_bat = h_bat[-1]["steps"] / max(bat_s, 1e-9)
+    sps_dev = h_dev[-1]["steps"] / max(dev_s, 1e-9)
 
     _, ppo_seq_s = timed(run_ppo_sequential, ppo, epochs=1,
                          steps_per_epoch=steps, log=None)
@@ -501,11 +537,16 @@ def bench_train_driver():
     out = {"lanes": lanes, "n_images": n_images, "steps_per_epoch": steps,
            "offpolicy": {
                "sequential_s": round(seq_s, 3), "batched_s": round(bat_s, 3),
+               "device_s": round(dev_s, 3),
                "sequential_steps_per_s": round(sps_seq, 1),
                "batched_steps_per_s": round(sps_bat, 1),
+               "device_steps_per_s": round(sps_dev, 1),
                "speedup": round(sps_bat / max(sps_seq, 1e-9), 2),
+               "speedup_device_vs_host": round(sps_dev / max(sps_bat, 1e-9),
+                                               2),
                "final_ap50_sequential": round(h_seq[-1]["ap50"], 2),
-               "final_ap50_batched": round(h_bat[-1]["ap50"], 2)},
+               "final_ap50_batched": round(h_bat[-1]["ap50"], 2),
+               "final_ap50_device": round(h_dev[-1]["ap50"], 2)},
            "ppo": {
                "sequential_s": round(ppo_seq_s, 3),
                "batched_s": round(ppo_bat_s, 3),
@@ -518,6 +559,10 @@ def bench_train_driver():
     _emit("train_driver/offpolicy_batched", 1e6 / max(sps_bat, 1e-9),
           f"steps_per_s={out['offpolicy']['batched_steps_per_s']};"
           f"speedup={out['offpolicy']['speedup']}x;lanes={lanes}")
+    _emit("train_driver/offpolicy_device", 1e6 / max(sps_dev, 1e-9),
+          f"steps_per_s={out['offpolicy']['device_steps_per_s']};"
+          f"speedup_device_vs_host="
+          f"{out['offpolicy']['speedup_device_vs_host']}x;lanes={lanes}")
     _emit("train_driver/ppo_sequential", 1e6 / max(ppo_sps_seq, 1e-9),
           f"steps_per_s={out['ppo']['sequential_steps_per_s']}")
     _emit("train_driver/ppo_batched", 1e6 / max(ppo_sps_bat, 1e-9),
@@ -998,6 +1043,162 @@ def bench_scenarios():
 
 
 # ---------------------------------------------------------------------------
+# Roofline: achieved vs peak FLOPs/bandwidth of the device-resident paths
+# ---------------------------------------------------------------------------
+
+def bench_roofline():
+    """Measured roofline points (``repro.roofline.measure``) for the
+    device-resident training paths:
+
+      * ``fused_update``  — the SAC ``lax.scan`` update block vs K eager
+        update dispatches: wall speedup, plus FLOPs parity from the
+        compiled executables' cost analyses.  XLA's cost model counts a
+        scanned body ONCE (trip count excluded), so parity is fused-body
+        FLOPs over one eager step's FLOPs, ~1.0 — a deterministic,
+        machine-invariant check that the fusion drops dispatch overhead,
+        not work.
+      * ``iou_batch``     — the batched pairwise-IoU path: HLO-derived
+        arithmetic intensity places it on the roofline (far below the
+        compute/memory knee: it is bandwidth-bound by construction), and
+        the CPU-twin vs interpret-mode-Pallas timing records why
+        ``resolve_use_kernel`` routes CPU backends to the twin.
+      * ``replay_chain``  — T circular writes + one block sample, device
+        buffer vs numpy buffer + host->device upload: the same-run
+        speedup ratio is the committed gate.
+
+    Achieved FLOP/s and fractions of the TPU-class ``HW`` peaks are
+    recorded for interpretation but NEVER gated — this container runs the
+    CPU backend, so only same-run ratios and HLO-derived quantities
+    (machine-invariant) carry across machines.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import sac as sac_mod
+    from repro.core.device_replay import DeviceReplayBuffer
+    from repro.core.replay_buffer import ReplayBuffer
+    from repro.core.sac import SAC, SACConfig
+    from repro.kernels.iou_matrix.kernel import iou_matrix_pallas
+    from repro.kernels.iou_matrix.ref import iou_matrix_ref
+    from repro.roofline import HW, achieved_point, hlo_cost, timed_best
+
+    rounds = int(os.environ.get("REPRO_BENCH_ROUNDS", "5"))
+    rng = np.random.default_rng(0)
+    hw = HW()
+    out = {"hw": {"peak_flops": hw.peak_flops, "hbm_bw": hw.hbm_bw},
+           "backend": jax.default_backend()}
+
+    # --- fused collect->update block vs eager per-step dispatch --------
+    D, N, K, B = 80, 3, 10, 64
+    cfg = SACConfig(state_dim=D, n_providers=N, hidden=(32, 32))
+    agent = SAC(cfg)
+    blk = {"s": rng.standard_normal((K, B, D)).astype(np.float32),
+           "a": (rng.random((K, B, N)) > 0.5).astype(np.float32),
+           "r": rng.standard_normal((K, B)).astype(np.float32),
+           "s2": rng.standard_normal((K, B, D)).astype(np.float32),
+           "d": np.zeros((K, B), np.float32)}
+    single = {k: v[0] for k, v in blk.items()}
+    ec = hlo_cost(sac_mod._update, cfg, agent.state,
+                  {k: jnp.asarray(v) for k, v in single.items()})
+    fc = hlo_cost(sac_mod._update_block, cfg, agent.state,
+                  {k: jnp.asarray(v) for k, v in blk.items()})
+
+    def run_fused():
+        agent.update_block(blk, sync=False)
+        jax.block_until_ready(agent.state)
+
+    def run_eager():
+        for _ in range(K):
+            agent.update(single)
+        jax.block_until_ready(agent.state)
+
+    # interleaved rounds: machine noise hits both candidates
+    fused_s, eager_s = _best_of(run_fused, run_eager, rounds=rounds)
+    # cost_analysis reports the scan BODY once: scale by K for the whole
+    # block's roofline point; body/eager-step ratio is the parity gate
+    block_cost = {"flops": K * fc["flops"], "bytes": K * fc["bytes"],
+                  "intensity": fc["intensity"]}
+    pt = achieved_point(block_cost, fused_s, hw=hw)
+    out["fused_update"] = {
+        "K": K, "batch": B, "state_dim": D,
+        "eager_s_per_block": round(eager_s, 5),
+        "fused_s_per_block": round(fused_s, 5),
+        "speedup_fused_vs_eager": round(eager_s / max(fused_s, 1e-12), 2),
+        "flops_parity": round(fc["flops"] / max(ec["flops"], 1e-9), 4),
+        "hlo_flops": block_cost["flops"], "hlo_bytes": block_cost["bytes"],
+        "hlo_intensity": round(fc["intensity"], 3),
+        "achieved_flops_s": round(pt["achieved_flops_s"], 1),
+        "frac_peak_flops": pt["frac_peak_flops"], "bound": pt["bound"]}
+    _emit("roofline/fused_update", 1e6 * fused_s,
+          f"speedup_vs_eager={out['fused_update']['speedup_fused_vs_eager']}"
+          f"x;flops_parity={out['fused_update']['flops_parity']};"
+          f"intensity={out['fused_update']['hlo_intensity']}")
+
+    # --- batched pairwise IoU ------------------------------------------
+    M, Nb = 256, 512
+    a = jnp.asarray(rng.random((M, 4)), jnp.float32)
+    b = jnp.asarray(rng.random((Nb, 4)), jnp.float32)
+    ref = jax.jit(iou_matrix_ref)
+    ic = hlo_cost(ref, a, b)
+    ref_s, _ = timed_best(ref, a, b, repeats=rounds)
+    pal_s, _ = timed_best(
+        lambda x, y: iou_matrix_pallas(x, y, interpret=True), a, b,
+        repeats=max(rounds // 2, 1))
+    ipt = achieved_point(ic, ref_s, hw=hw)
+    out["iou_batch"] = {
+        "m": M, "n": Nb,
+        "hlo_flops": ic["flops"], "hlo_bytes": ic["bytes"],
+        "hlo_intensity": round(ic["intensity"], 3),
+        "twin_s": round(ref_s, 6), "pallas_interpret_s": round(pal_s, 4),
+        "twin_vs_interpret": round(pal_s / max(ref_s, 1e-12), 1),
+        "achieved_bw_s": round(ipt["achieved_bw_s"], 1),
+        "frac_peak_bw": ipt["frac_peak_bw"],
+        "knee_intensity": round(ipt["knee_intensity"], 1),
+        "bound": ipt["bound"]}
+    _emit("roofline/iou_batch", 1e6 * ref_s,
+          f"intensity={out['iou_batch']['hlo_intensity']};"
+          f"bound={out['iou_batch']['bound']};"
+          f"twin_vs_interpret={out['iou_batch']['twin_vs_interpret']}x")
+
+    # --- replay write+sample chain: device vs host buffer --------------
+    # T ticks per sampled block mirrors the multi-lane driver's regime
+    # (update_every=50 at 8 lanes: ~6 collect ticks per update block);
+    # the two chains interleave round-by-round so load spikes hit both
+    cap, L, T = 4096, 8, 6
+    rows = (rng.standard_normal((T, L, D)).astype(np.float32),
+            (rng.random((T, L, N)) > 0.5).astype(np.float32),
+            rng.standard_normal((T, L)).astype(np.float32),
+            rng.standard_normal((T, L, D)).astype(np.float32),
+            np.zeros((T, L), np.float32))
+    hbuf = ReplayBuffer(cap, D, N, seed=0)
+    dbuf = DeviceReplayBuffer(cap, D, N, seed=0, index_mode="jax")
+
+    def chain_host():
+        # the host path as run_off_policy drives it: numpy writes, numpy
+        # index draw + gather, then the block's host->device upload
+        for t in range(T):
+            hbuf.add_batch(*(x[t] for x in rows))
+        blk = hbuf.sample_block(K, B)
+        jax.block_until_ready({k: jnp.asarray(v) for k, v in blk.items()})
+
+    def chain_device():
+        for t in range(T):
+            dbuf.add_batch(*(x[t] for x in rows))
+        jax.block_until_ready(dbuf.sample_block(K, B))
+
+    host_s, dev_s = _best_of(chain_host, chain_device, rounds=rounds)
+    out["replay_chain"] = {
+        "capacity": cap, "ticks": T, "lanes": L, "K": K, "batch": B,
+        "host_s": round(host_s, 5), "device_s": round(dev_s, 5),
+        "speedup_device_vs_host": round(host_s / max(dev_s, 1e-12), 2)}
+    _emit("roofline/replay_chain", 1e6 * dev_s,
+          f"host={out['replay_chain']['host_s']}s;"
+          f"device={out['replay_chain']['device_s']}s;speedup_device="
+          f"{out['replay_chain']['speedup_device_vs_host']}x")
+    _save("roofline", out)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Kernel microbenchmarks (CPU interpret mode — correctness-level timing)
 # ---------------------------------------------------------------------------
 
@@ -1061,6 +1262,7 @@ BENCHES = {
     "serving_mp": bench_serving_mp,
     "serving_scenarios": bench_serving_scenarios,
     "scenarios": bench_scenarios,
+    "roofline": bench_roofline,
     "kernels": bench_kernels,
 }
 

@@ -1,0 +1,301 @@
+"""Device-resident circular replay buffer (jax arrays end to end).
+
+``DeviceReplayBuffer`` mirrors the numpy ``ReplayBuffer`` contract but
+keeps all transition storage on device: circular writes are donated
+jitted scatters (``lax.dynamic_update_slice`` for scalar adds, index
+scatter for batches), and ``sample``/``sample_block`` gather directly
+into device arrays that ``SAC/TD3.update_block`` consumes with zero
+host round trips between collect and update.
+
+Two index sources for the sample draw:
+
+  * ``index_mode="jax"``   — a jitted, fori-free ``jax.random.randint``
+    over an explicit PRNG key held by the buffer (the production path:
+    the whole sample->update chain stays on device).
+  * ``index_mode="host"``  — indices from the same
+    ``np.random.default_rng(seed)`` stream the numpy buffer consumes,
+    gathered on device.  Pure gathers are exact, so a driver fed this
+    buffer is BIT-IDENTICAL to one fed the numpy buffer (transition
+    stream, sampled batches, update math) — the parity mode the
+    device-path driver tests pin against the frozen sequential
+    references.
+
+With a ``feature_table`` (a device mirror of the env's per-image state
+features), ``add_batch_indexed`` assembles the state/next-state rows ON
+DEVICE from image indices — the host ships only small index/reward
+vectors per tick, never the (L, D) feature rows.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class _Store(NamedTuple):
+    state: jnp.ndarray
+    action: jnp.ndarray
+    reward: jnp.ndarray
+    next_state: jnp.ndarray
+    done: jnp.ndarray
+
+
+def _scatter(store: _Store, rows: _Store, idx: jnp.ndarray) -> _Store:
+    return _Store(*(buf.at[idx].set(new)
+                    for buf, new in zip(store, rows)))
+
+
+@partial(jax.jit, static_argnums=(3,), donate_argnums=(0,))
+def _write_batch(store: _Store, rows: _Store, ptr, capacity: int) -> _Store:
+    """Donated circular write of B rows starting at ``ptr``; B <= capacity
+    (the caller drops the rows a scalar loop would overwrite)."""
+    B = rows.reward.shape[0]
+    idx = (ptr + jnp.arange(B)) % capacity
+    return _scatter(store, rows, idx)
+
+
+def _slab(store: _Store, rows: _Store, ptr) -> _Store:
+    def upd(buf, new):
+        start = (ptr,) + (0,) * (buf.ndim - 1)
+        return jax.lax.dynamic_update_slice(buf, new, start)
+    return _Store(*(upd(buf, new) for buf, new in zip(store, rows)))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_batch_contig(store: _Store, rows: _Store, ptr) -> _Store:
+    """Non-wrapping fast path (the common case: the host caller knows
+    ptr + B <= capacity): a donated contiguous slab update, cheaper to
+    lower than the modular scatter."""
+    return _slab(store, rows, ptr)
+
+
+@partial(jax.jit, static_argnums=(4,), donate_argnums=(0,))
+def _write_batch_indexed(store: _Store, table, parts, ptr,
+                         capacity: int) -> _Store:
+    """Like ``_write_batch`` but the state/next-state rows are gathered
+    from the device feature table inside the same jitted write — the
+    on-device env feature assembly path."""
+    s_idx, a, r, s2_idx, d = parts
+    rows = _Store(table[s_idx], a, r, table[s2_idx], d)
+    B = rows.reward.shape[0]
+    idx = (ptr + jnp.arange(B)) % capacity
+    return _scatter(store, rows, idx)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_batch_indexed_contig(store: _Store, table, parts, ptr) -> _Store:
+    """Non-wrapping variant of the indexed write."""
+    s_idx, a, r, s2_idx, d = parts
+    return _slab(store, _Store(table[s_idx], a, r, table[s2_idx], d), ptr)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_one(store: _Store, rows: _Store, ptr) -> _Store:
+    """Donated single-row write at ``ptr`` (never wraps)."""
+    def upd(buf, row):
+        start = (ptr,) + (0,) * (buf.ndim - 1)
+        return jax.lax.dynamic_update_slice(buf, row[None], start)
+    return _Store(*(upd(buf, row) for buf, row in zip(store, rows)))
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def _draw_block(key, size, iters: int, batch: int):
+    """One key split + ONE fori-free randint for the whole (iters, batch)
+    index matrix (``size`` is traced, so buffer growth never recompiles)."""
+    key, sub = jax.random.split(key)
+    idx = jax.random.randint(sub, (iters, batch), 0, size)
+    return key, idx
+
+
+@partial(jax.jit, static_argnums=(3, 4))
+def _sample_block_jax(store: _Store, key, size, iters: int, batch: int):
+    """Fused draw + gather: the jax-index-mode hot path is ONE dispatch
+    per sampled block."""
+    key, sub = jax.random.split(key)
+    idx = jax.random.randint(sub, (iters, batch), 0, size)
+    return key, {"s": store.state[idx], "a": store.action[idx],
+                 "r": store.reward[idx], "s2": store.next_state[idx],
+                 "d": store.done[idx]}
+
+
+@jax.jit
+def _gather(store: _Store, idx) -> Dict[str, jnp.ndarray]:
+    return {"s": store.state[idx], "a": store.action[idx],
+            "r": store.reward[idx], "s2": store.next_state[idx],
+            "d": store.done[idx]}
+
+
+class DeviceReplayBuffer:
+    """Drop-in replay buffer with jax-array storage.
+
+    ``state``/``action``/... read back as numpy views (host copies) so
+    the numpy buffer's parity assertions apply verbatim; the hot path
+    never touches them.
+    """
+
+    # run_off_policy keys off these to fuse collect->update on device
+    device_resident = True
+
+    def __init__(self, capacity: int, state_dim: int, action_dim: int,
+                 seed: int = 0, *, index_mode: str = "jax",
+                 feature_table: Optional[jnp.ndarray] = None):
+        if index_mode not in ("jax", "host"):
+            raise ValueError(f"index_mode must be 'jax' or 'host', "
+                             f"got {index_mode!r}")
+        self.capacity = capacity
+        self.index_mode = index_mode
+        self._store = _Store(
+            jnp.zeros((capacity, state_dim), jnp.float32),
+            jnp.zeros((capacity, action_dim), jnp.float32),
+            jnp.zeros((capacity,), jnp.float32),
+            jnp.zeros((capacity, state_dim), jnp.float32),
+            jnp.zeros((capacity,), jnp.float32))
+        self.size = 0
+        self.ptr = 0
+        # host generator mirrors the numpy buffer's stream; in "jax" mode
+        # the explicit PRNG key drives the jitted index draw instead
+        self.rng = np.random.default_rng(seed)
+        self._key = jax.random.PRNGKey(seed)
+        self.feature_table = None if feature_table is None else \
+            jnp.asarray(feature_table, jnp.float32)
+
+    # ------------------------------------------------------------------
+    # numpy-compatible read views (parity assertions, checkpoints)
+    # ------------------------------------------------------------------
+    @property
+    def state(self) -> np.ndarray:
+        return np.asarray(self._store.state)
+
+    @property
+    def action(self) -> np.ndarray:
+        return np.asarray(self._store.action)
+
+    @property
+    def reward(self) -> np.ndarray:
+        return np.asarray(self._store.reward)
+
+    @property
+    def next_state(self) -> np.ndarray:
+        return np.asarray(self._store.next_state)
+
+    @property
+    def done(self) -> np.ndarray:
+        return np.asarray(self._store.done)
+
+    @property
+    def indexed(self) -> bool:
+        """True when ``add_batch_indexed`` can assemble feature rows on
+        device (a feature table was attached)."""
+        return self.feature_table is not None
+
+    # ------------------------------------------------------------------
+    # writes
+    # ------------------------------------------------------------------
+    def _advance(self, B: int) -> None:
+        self.ptr = (self.ptr + B) % self.capacity
+        self.size = min(self.size + B, self.capacity)
+
+    # Host-boundary discipline: normalize shapes/dtypes with cheap numpy
+    # ops and hand NUMPY leaves straight to the jitted writes — the pjit
+    # C++ fastpath converts arguments at dispatch for a fraction of what
+    # a python-level ``jnp.asarray`` per leaf costs.
+
+    def add(self, s, a, r, s2, d) -> None:
+        rows = _Store(np.asarray(s, np.float32).reshape(-1),
+                      np.asarray(a, np.float32).reshape(-1),
+                      np.float32(r), np.asarray(s2, np.float32).reshape(-1),
+                      np.float32(d))
+        self._store = _write_one(self._store, rows, self.ptr)
+        self._advance(1)
+
+    def add_batch(self, s, a, r, s2, d) -> None:
+        """Vectorized donated circular write of B transitions; matches B
+        scalar ``add`` calls exactly, wraparound and B > capacity (only
+        the last ``capacity`` rows survive) included."""
+        state_dim = self._store.state.shape[1]
+        action_dim = self._store.action.shape[1]
+        rows = _Store(np.asarray(s, np.float32).reshape(-1, state_dim),
+                      np.asarray(a, np.float32).reshape(-1, action_dim),
+                      np.asarray(r, np.float32).reshape(-1),
+                      np.asarray(s2, np.float32).reshape(-1, state_dim),
+                      np.asarray(d, np.float32).reshape(-1))
+        B = rows.reward.shape[0]
+        if B == 0:
+            return
+        skip = max(0, B - self.capacity)    # rows a scalar loop overwrites
+        if skip:
+            rows = _Store(*(x[skip:] for x in rows))
+        start = (self.ptr + skip) % self.capacity
+        if start + (B - skip) <= self.capacity:     # no wrap: slab update
+            self._store = _write_batch_contig(self._store, rows, start)
+        else:
+            self._store = _write_batch(self._store, rows, start,
+                                       self.capacity)
+        self._advance(B)
+
+    def add_batch_indexed(self, s_idx, a, r, s2_idx, d) -> None:
+        """Circular write where state/next-state rows are gathered ON
+        DEVICE from the attached feature table — only image indices,
+        actions, rewards and done flags cross the host boundary."""
+        if self.feature_table is None:
+            raise ValueError("add_batch_indexed requires a feature_table")
+        action_dim = self._store.action.shape[1]
+        parts = (np.asarray(s_idx, np.int32).reshape(-1),
+                 np.asarray(a, np.float32).reshape(-1, action_dim),
+                 np.asarray(r, np.float32).reshape(-1),
+                 np.asarray(s2_idx, np.int32).reshape(-1),
+                 np.asarray(d, np.float32).reshape(-1))
+        B = parts[2].shape[0]
+        if B == 0:
+            return
+        skip = max(0, B - self.capacity)
+        if skip:
+            parts = tuple(x[skip:] for x in parts)
+        start = (self.ptr + skip) % self.capacity
+        if start + (B - skip) <= self.capacity:     # no wrap: slab update
+            self._store = _write_batch_indexed_contig(
+                self._store, self.feature_table, parts, start)
+        else:
+            self._store = _write_batch_indexed(
+                self._store, self.feature_table, parts, start,
+                self.capacity)
+        self._advance(B)
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+    def _indices(self, shape):
+        if self.index_mode == "host":
+            # numpy leaves go straight to the jitted gather (fastpath)
+            return self.rng.integers(0, self.size, size=shape)
+        if len(shape) == 2:
+            self._key, idx = _draw_block(self._key, self.size, *shape)
+        else:
+            self._key, idx = _draw_block(self._key, self.size, 1, shape[0])
+            idx = idx[0]
+        return idx
+
+    def sample(self, batch: int) -> Dict[str, jnp.ndarray]:
+        if self.size == 0:
+            raise ValueError("cannot sample from an empty replay buffer")
+        return _gather(self._store, self._indices((batch,)))
+
+    def sample_block(self, iters: int, batch: int) -> Dict[str, jnp.ndarray]:
+        """``iters`` update batches in one draw + one device gather: dict
+        of (iters, batch, ...) DEVICE arrays, fed straight to
+        ``update_block`` without host materialization.  In jax index
+        mode draw + gather fuse into a single dispatch (the index stream
+        matches ``_draw_block`` exactly — same split, same randint)."""
+        if self.size == 0:
+            raise ValueError("cannot sample from an empty replay buffer")
+        if self.index_mode == "jax":
+            self._key, blk = _sample_block_jax(self._store, self._key,
+                                               self.size, iters, batch)
+            return blk
+        return _gather(self._store, self._indices((iters, batch)))
+
+    def __len__(self) -> int:
+        return self.size

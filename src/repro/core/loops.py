@@ -208,6 +208,15 @@ def run_off_policy(agent, env: ArmolEnv, *, lanes: int = 1, epochs: int = 5,
     matches the sequential driver at any lane count.  With ``lanes=1``
     the transition stream and history are bit-identical to
     ``run_offpolicy_sequential``.
+
+    Passing a ``DeviceReplayBuffer`` as ``buffer`` makes the hot path
+    device-resident: replay writes are donated device scatters (with a
+    feature table attached, state rows are assembled ON DEVICE from the
+    image indices ``step_lanes`` reports), ``sample_block`` gathers into
+    device arrays that ``update_block`` consumes directly, and the
+    driver skips the per-block metric sync — no host materialization
+    between collect and update.  In the buffer's ``index_mode="host"``
+    the whole run stays bit-identical to the numpy-buffer path.
     """
     if lanes < 1:
         raise ValueError(f"lanes must be >= 1, got {lanes}")
@@ -216,6 +225,8 @@ def run_off_policy(agent, env: ArmolEnv, *, lanes: int = 1, epochs: int = 5,
         ReplayBuffer(buffer_capacity, env.state_dim, env.n_providers,
                      seed=seed)
     update_block = getattr(agent, "update_block", None)
+    device_buf = bool(getattr(buf, "device_resident", False))
+    indexed_writes = bool(getattr(buf, "indexed", False))
     select_many = _make_batch_select(agent, deterministic=False)
     n = env.n_providers
     history = []
@@ -240,15 +251,38 @@ def run_off_policy(agent, env: ArmolEnv, *, lanes: int = 1, epochs: int = 5,
             elif len(on_policy):
                 acts[on_policy] = select_many(states[on_policy])
             nxt, r, dones, infos, carry = env.step_lanes(acts)
-            buf.add_batch(states, acts, r, nxt, dones.astype(np.float32))
+            d = dones.astype(np.float32)
+            if indexed_writes and "next_image" in infos:
+                # states == features[infos["image"]] and
+                # nxt == features[infos["next_image"]] by step_lanes'
+                # contract, so gathering those rows from the buffer's
+                # device feature table is bitwise the same write — only
+                # the index/reward vectors cross the host boundary
+                buf.add_batch_indexed(infos["image"], acts, r,
+                                      infos["next_image"], d)
+            else:
+                buf.add_batch(states, acts, r, nxt, d)
             states = carry
             prev, total = total, total + lanes
             for k in range(prev // update_every + 1,
                            total // update_every + 1):
                 if k * update_every < update_after:
                     continue
+                if len(buf) == 0:
+                    raise ValueError(
+                        "cannot sample from an empty replay buffer: an "
+                        f"update is scheduled at step {k * update_every} "
+                        "but no transitions have been stored "
+                        f"(update_after={update_after})")
                 if update_block is not None:
-                    update_block(buf.sample_block(update_iters, batch_size))
+                    blk = buf.sample_block(update_iters, batch_size)
+                    if device_buf:
+                        # device buffers feed update_block device arrays;
+                        # skipping the per-block metric sync keeps the
+                        # collect->update chain free of host round trips
+                        update_block(blk, sync=False)
+                    else:
+                        update_block(blk)
                 else:
                     for _ in range(update_iters):
                         agent.update(buf.sample(batch_size))

@@ -171,7 +171,12 @@ class PPO:
 
     def update_from_rollout(self, rollout: Dict[str, np.ndarray]):
         idx, w = self._minibatch_plan(len(rollout["s"]))
-        mbs = {k: jnp.asarray(np.asarray(v)[idx])
+        # ship each (T, ...) rollout array once and gather the (K, mb, ...)
+        # minibatch stack ON DEVICE — gathers are pure selection, so this
+        # is bitwise the old host-side fancy-indexing, minus the K-fold
+        # transfer blow-up
+        jidx = jnp.asarray(idx)
+        mbs = {k: jnp.asarray(np.asarray(v))[jidx]
                for k, v in rollout.items()}
         mbs["w"] = jnp.asarray(w)
         self.state, metrics = _update_rollout_block(self.cfg, self.state,

@@ -60,6 +60,8 @@ class ReplayBuffer:
         self.size = min(self.size + B, self.capacity)
 
     def sample(self, batch: int) -> Dict[str, np.ndarray]:
+        if self.size == 0:
+            raise ValueError("cannot sample from an empty replay buffer")
         idx = self.rng.integers(0, self.size, size=batch)
         return {"s": self.state[idx], "a": self.action[idx],
                 "r": self.reward[idx], "s2": self.next_state[idx],
@@ -70,6 +72,8 @@ class ReplayBuffer:
         (iters, batch, ...) arrays.  The (iters, batch) index matrix comes
         from a single ``rng.integers`` call, which consumes the generator
         stream identically to ``iters`` successive ``sample`` calls."""
+        if self.size == 0:
+            raise ValueError("cannot sample from an empty replay buffer")
         idx = self.rng.integers(0, self.size, size=(iters, batch))
         return {"s": self.state[idx], "a": self.action[idx],
                 "r": self.reward[idx], "s2": self.next_state[idx],

@@ -144,10 +144,20 @@ class SAC:
         self.state, metrics = _update(self.cfg, self.state, jb)
         return {k: float(v) for k, v in metrics.items()}
 
-    def update_block(self, batches: Dict[str, np.ndarray]) -> Dict[str, float]:
+    def update_block(self, batches: Dict[str, np.ndarray], *,
+                     sync: bool = True) -> Dict[str, Any]:
         """K fused gradient steps from pre-sampled (K, B, ...) batches
         (``ReplayBuffer.sample_block``); returns the last step's metrics,
-        matching what an eager K-iteration loop would report."""
+        matching what an eager K-iteration loop would report.
+
+        ``jnp.asarray`` is a no-op on device arrays, so batches from a
+        ``DeviceReplayBuffer`` feed the scan zero-copy; ``sync=False``
+        returns the raw (K,) per-step metric traces as device arrays —
+        no host sync and no extra op dispatches (the device-resident
+        driver discards them; index ``[-1]`` lazily if you need the
+        last step)."""
         jb = {k: jnp.asarray(v) for k, v in batches.items()}
         self.state, metrics = _update_block(self.cfg, self.state, jb)
+        if not sync:
+            return dict(metrics)
         return {k: float(np.asarray(v)[-1]) for k, v in metrics.items()}

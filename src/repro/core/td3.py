@@ -135,8 +135,14 @@ class TD3:
         self.state, metrics = _update(self.cfg, self.state, jb)
         return {k: float(v) for k, v in metrics.items()}
 
-    def update_block(self, batches: Dict[str, np.ndarray]) -> Dict[str, float]:
-        """K fused gradient steps from pre-sampled (K, B, ...) batches."""
+    def update_block(self, batches: Dict[str, np.ndarray], *,
+                     sync: bool = True) -> Dict[str, Any]:
+        """K fused gradient steps from pre-sampled (K, B, ...) batches;
+        ``sync=False`` returns the raw (K,) per-step metric traces as
+        device arrays — no host sync, no extra op dispatches (the
+        device-resident driver path)."""
         jb = {k: jnp.asarray(v) for k, v in batches.items()}
         self.state, metrics = _update_block(self.cfg, self.state, jb)
+        if not sync:
+            return dict(metrics)
         return {k: float(np.asarray(v)[-1]) for k, v in metrics.items()}

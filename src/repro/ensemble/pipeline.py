@@ -33,7 +33,12 @@ def resolve_use_kernel(use_kernel: Union[bool, str]) -> bool:
     """``"auto"`` -> Pallas IoU kernel on accelerator backends, numpy twin
     on CPU (where interpret-mode Pallas is orders of magnitude slower and
     the numpy reference is the kernel's bitwise oracle anyway)."""
-    if use_kernel == "auto":
+    if isinstance(use_kernel, str):
+        if use_kernel != "auto":
+            # a typo like "atuo" must not silently coerce to True (any
+            # non-empty string is truthy) and flip the dispatch
+            raise ValueError(
+                f"use_kernel must be a bool or 'auto', got {use_kernel!r}")
         import jax
         return jax.default_backend() != "cpu"
     return bool(use_kernel)

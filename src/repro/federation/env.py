@@ -75,6 +75,27 @@ class ArmolEnv:
         self._lane_orders: list = []
         self._lane_t = np.zeros(0, np.int64)
         self._lane_split = ("train", True)
+        self._features_dev = None
+        self._costs_dev = None
+
+    # ------------------------------------------------------------------
+    # device mirrors: per-image state features and the provider fee
+    # vector as jax arrays, built lazily and cached.  The device-resident
+    # training path assembles replay rows from these on device
+    # (``DeviceReplayBuffer.add_batch_indexed``), so per-tick host
+    # traffic shrinks to small index/reward vectors.
+    # ------------------------------------------------------------------
+    def device_features(self):
+        if self._features_dev is None:
+            import jax.numpy as jnp
+            self._features_dev = jnp.asarray(self.features, jnp.float32)
+        return self._features_dev
+
+    def device_costs(self):
+        if self._costs_dev is None:
+            import jax.numpy as jnp
+            self._costs_dev = jnp.asarray(self.costs, jnp.float32)
+        return self._costs_dev
 
     @property
     def _against(self) -> str:
@@ -178,14 +199,19 @@ class ArmolEnv:
         lens = np.asarray([len(o) for o in self._lane_orders])
         dones = self._lane_t >= lens
         nxt_pos = np.minimum(self._lane_t, lens - 1)
-        nxt = self.features[
-            [int(o[p]) for o, p in zip(self._lane_orders, nxt_pos)]]
+        nxt_imgs = np.asarray([int(o[p]) for o, p in
+                               zip(self._lane_orders, nxt_pos)], np.int64)
+        nxt = self.features[nxt_imgs]
         split, shuffle = self._lane_split
         idx = self.train_idx if split == "train" else self.test_idx
         for lane in np.flatnonzero(dones):
             self._lane_orders[lane] = self._episode_order(idx, shuffle)
             self._lane_t[lane] = 0
-        infos = {"ap50": out["ap50"], "cost": out["cost"], "image": imgs}
+        # "image"/"next_image" are the row indices of ``states``/``nxt``
+        # in the feature table — the device-resident buffer writes
+        # transitions from these instead of the materialized rows
+        infos = {"ap50": out["ap50"], "cost": out["cost"], "image": imgs,
+                 "next_image": nxt_imgs}
         return nxt, out["reward"], dones, infos, self.lane_states()
 
     def step_batch(self, actions: np.ndarray):

@@ -1,2 +1,4 @@
 from repro.roofline.analysis import (HW, collective_bytes, roofline_terms,  # noqa: F401
                                      model_flops)
+from repro.roofline.measure import (achieved_point, hlo_cost, measure,  # noqa: F401
+                                    timed_best)

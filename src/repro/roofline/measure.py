@@ -1,0 +1,91 @@
+"""Measured roofline points for jitted programs (achieved vs peak).
+
+``analysis.py`` models a roofline from configs; this module measures one:
+the compiled executable's own cost model supplies FLOPs and bytes
+(``jitfn.lower(...).compile().cost_analysis()``), wall time comes from a
+best-of-K timed run with ``block_until_ready`` fencing, and the two
+combine into achieved FLOP/s / bandwidth and fractions of the ``HW``
+peaks.  Arithmetic intensity (FLOPs per HBM byte) places the program on
+the roofline's x-axis: intensity below ``peak_flops / hbm_bw`` means the
+memory roof binds, above it the compute roof.
+
+Absolute achieved numbers are machine-dependent (this container runs the
+CPU backend against a TPU-class HW model, so fractions of peak are tiny
+and meaningless as gates); the benchmark suite therefore gates only
+same-run speedup ratios and HLO-derived quantities, which are invariant
+across hosts.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+
+from repro.roofline.analysis import HW
+
+
+def _first(d, *names, default=0.0):
+    for n in names:
+        if n in d:
+            return float(d[n])
+    return default
+
+
+def hlo_cost(jitfn, *args, **kwargs) -> Dict[str, float]:
+    """FLOPs / bytes / arithmetic intensity of one compiled call.
+
+    Uses the executable's cost analysis (per-device numbers).  Older jax
+    versions return a list of per-computation dicts — take the entry for
+    the main computation.  Missing keys read as 0.0 (the CPU backend
+    reports flops but sometimes omits ``bytes accessed``).
+    """
+    ca = jitfn.lower(*args, **kwargs).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = _first(ca, "flops")
+    byts = _first(ca, "bytes accessed", "bytes_accessed")
+    return {"flops": flops, "bytes": byts,
+            "intensity": flops / byts if byts else 0.0}
+
+
+def timed_best(fn: Callable, *args, repeats: int = 5,
+               **kwargs) -> Tuple[float, object]:
+    """Best-of-``repeats`` wall seconds for one fenced call (compile /
+    warmup excluded: one untimed call runs first)."""
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def achieved_point(cost: Dict[str, float], seconds: float,
+                   hw: HW = HW()) -> Dict[str, float]:
+    """One measured roofline point: achieved rates + fractions of the
+    ``HW`` peaks + which roof the HLO intensity says should bind."""
+    flops, byts = cost["flops"], cost["bytes"]
+    knee = hw.peak_flops / hw.hbm_bw          # intensity where roofs cross
+    bound = "compute" if cost["intensity"] >= knee else "memory"
+    return {
+        "flops": flops, "bytes": byts, "intensity": cost["intensity"],
+        "seconds": seconds,
+        "achieved_flops_s": flops / seconds if seconds else 0.0,
+        "achieved_bw_s": byts / seconds if seconds else 0.0,
+        "frac_peak_flops": (flops / seconds) / hw.peak_flops
+        if seconds else 0.0,
+        "frac_peak_bw": (byts / seconds) / hw.hbm_bw if seconds else 0.0,
+        "knee_intensity": knee, "bound": bound,
+    }
+
+
+def measure(jitfn, *args, repeats: int = 5, hw: HW = HW(),
+            **kwargs) -> Dict[str, float]:
+    """Compile-cost + timed run + roofline placement in one call."""
+    cost = hlo_cost(jitfn, *args, **kwargs)
+    seconds, _ = timed_best(jitfn, *args, repeats=repeats, **kwargs)
+    return achieved_point(cost, seconds, hw=hw)

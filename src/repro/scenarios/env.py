@@ -84,6 +84,7 @@ class NonStationaryArmolEnv(ArmolEnv):
 
     def _write_status(self, view) -> None:
         self.features[:, self._base_dim:] = self._status_vec(view)[None]
+        self._features_dev = None   # the device mirror is now stale
 
     def features_at(self, step: int,
                     img_indices: Sequence[int]) -> np.ndarray:

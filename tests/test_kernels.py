@@ -141,3 +141,63 @@ def test_ssd_initial_state_continuation():
                                atol=5e-4)
     np.testing.assert_allclose(np.asarray(st_full), np.asarray(st2),
                                atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch: resolve_use_kernel + iou_matrix_op fallback
+# ---------------------------------------------------------------------------
+
+def test_resolve_use_kernel_rejects_bad_strings():
+    """Regression: a typo like "atuo" used to silently resolve as truthy
+    instead of failing loudly."""
+    from repro.ensemble.pipeline import resolve_use_kernel
+    for bad in ("atuo", "Auto", "yes", ""):
+        with pytest.raises(ValueError, match="use_kernel"):
+            resolve_use_kernel(bad)
+    assert resolve_use_kernel("auto") == (jax.default_backend() != "cpu")
+    assert resolve_use_kernel(True) is True
+    assert resolve_use_kernel(False) is False
+
+
+def test_iou_matrix_op_clamps_blocks_to_tiny_inputs():
+    """Regression: default 128x128 blocks on a 3x2 problem used to reach
+    the kernel with out-of-range tiles."""
+    from repro.kernels.iou_matrix.ops import iou_matrix_op
+    a = RNG.random((3, 4)).astype(np.float32)
+    b = RNG.random((2, 4)).astype(np.float32)
+    a[:, 2:] = a[:, :2] + 0.5
+    b[:, 2:] = b[:, :2] + 0.5
+    got = np.asarray(iou_matrix_op(a, b))           # default block sizes
+    want = np.asarray(iou_matrix_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_iou_matrix_op_falls_back_on_lowering_failure():
+    """When the Pallas kernel raises, the op must warn ONCE and return
+    the numpy twin's result instead of propagating the error."""
+    from repro.ensemble.boxes import iou_matrix
+    from repro.kernels.iou_matrix import ops
+
+    def boom(*a, **kw):
+        raise RuntimeError("no pallas lowering for this backend")
+
+    a = RNG.random((5, 4)).astype(np.float32)
+    b = RNG.random((7, 4)).astype(np.float32)
+    a[:, 2:] = a[:, :2] + 0.5
+    b[:, 2:] = b[:, :2] + 0.5
+    orig = ops.iou_matrix_pallas
+    orig_flag = ops._FALLBACK_WARNED
+    ops.iou_matrix_pallas, ops._FALLBACK_WARNED = boom, False
+    try:
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            got = np.asarray(ops.iou_matrix_op(a, b))
+        # second call: same fallback result, but no repeat warning
+        import warnings as _warnings
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error")
+            again = np.asarray(ops.iou_matrix_op(a, b))
+    finally:
+        ops.iou_matrix_pallas, ops._FALLBACK_WARNED = orig, orig_flag
+    want = iou_matrix(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(again, want, rtol=1e-6, atol=1e-6)

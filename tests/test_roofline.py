@@ -1,0 +1,95 @@
+"""Measured-roofline utilities: HLO cost extraction, fenced timing, and
+roofline placement (``repro.roofline.measure``)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.roofline.analysis import HW  # noqa: E402
+from repro.roofline.measure import (achieved_point, hlo_cost,  # noqa: E402
+                                    measure, timed_best)
+
+
+@jax.jit
+def _matmul(a, b):
+    return a @ b
+
+
+def test_hlo_cost_counts_matmul_flops():
+    n = 64
+    a = jnp.ones((n, n), jnp.float32)
+    cost = hlo_cost(_matmul, a, a)
+    # XLA counts an n^3 matmul as 2n^3 flops; allow fusion slack
+    assert cost["flops"] >= 2 * n ** 3
+    assert cost["flops"] < 4 * n ** 3
+    if cost["bytes"]:      # CPU backend sometimes omits bytes accessed
+        assert cost["intensity"] == pytest.approx(
+            cost["flops"] / cost["bytes"])
+    else:
+        assert cost["intensity"] == 0.0
+
+
+def test_hlo_cost_scan_counts_body_once():
+    """XLA's cost model excludes the trip count of a ``lax.scan`` — the
+    property the fused-update flops_parity gate relies on."""
+    @jax.jit
+    def once(x):
+        return x @ x
+
+    @jax.jit
+    def scanned(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    x = jnp.ones((32, 32), jnp.float32)
+    f1 = hlo_cost(once, x)["flops"]
+    f10 = hlo_cost(scanned, x)["flops"]
+    assert f10 == pytest.approx(f1, rel=0.1)
+
+
+def test_timed_best_returns_positive_time_and_result():
+    a = jnp.ones((32, 32), jnp.float32)
+    seconds, out = timed_best(_matmul, a, a, repeats=2)
+    assert seconds > 0.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ a))
+
+
+def test_achieved_point_bound_selection():
+    hw = HW()
+    knee = hw.peak_flops / hw.hbm_bw
+    lo = achieved_point({"flops": 1e6, "bytes": 1e6,
+                         "intensity": knee / 10}, seconds=1e-3, hw=hw)
+    hi = achieved_point({"flops": 1e9, "bytes": 1e3,
+                         "intensity": knee * 10}, seconds=1e-3, hw=hw)
+    assert lo["bound"] == "memory" and hi["bound"] == "compute"
+    assert lo["knee_intensity"] == pytest.approx(knee)
+    assert lo["achieved_flops_s"] == pytest.approx(1e9)
+    assert lo["frac_peak_bw"] == pytest.approx(1e9 / hw.hbm_bw)
+
+
+def test_measure_composes():
+    a = jnp.ones((48, 48), jnp.float32)
+    pt = measure(_matmul, a, a, repeats=2)
+    assert pt["flops"] > 0 and pt["seconds"] > 0
+    assert pt["bound"] in ("memory", "compute")
+
+
+@pytest.mark.slow
+def test_measure_does_not_consume_donated_args():
+    """``hlo_cost`` lowers without executing, so measuring a
+    donate_argnums function must not invalidate the caller's arrays."""
+    from functools import partial
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def bump(x):
+        return x + 1
+
+    x = jnp.zeros((8,), jnp.float32)
+    cost = hlo_cost(bump, x)
+    assert cost["flops"] >= 0
+    np.testing.assert_array_equal(np.asarray(x), 0.0)  # still alive

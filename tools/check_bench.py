@@ -78,7 +78,16 @@ GATES = {
     "lattice": [Gate("speedup_n7"), Gate("speedup_n10")],
     "serving": [Gate("speedup_async_vs_handle"),
                 Gate("speedup_many_vs_handle")],
-    "train_driver": [Gate("offpolicy.speedup"), Gate("ppo.speedup")],
+    "train_driver": [Gate("offpolicy.speedup"), Gate("ppo.speedup"),
+                     Gate("offpolicy.speedup_device_vs_host")],
+    # machine-invariant roofline gates: FLOPs parity of the scanned
+    # update block vs K eager steps and the batched-IoU arithmetic
+    # intensity are HLO-derived (deterministic per XLA version); the two
+    # speedups are same-run ratios, which cancel absolute machine speed
+    "roofline": [Gate("fused_update.flops_parity"),
+                 Gate("fused_update.speedup_fused_vs_eager"),
+                 Gate("iou_batch.hlo_intensity"),
+                 Gate("replay_chain.speedup_device_vs_host")],
     # scenario gates are quality ratios, not timings: post-switch
     # recovery vs the per-segment oracle and the warm-path cache hit
     # rate the stream saw — both machine-speed invariant
@@ -108,6 +117,7 @@ BENCH_ENV = {
                 "REPRO_BENCH_ROUNDS": "3"},
     "serving": {"REPRO_BENCH_IMAGES": "50"},
     "train_driver": {"REPRO_BENCH_IMAGES": "120"},
+    "roofline": {"REPRO_BENCH_ROUNDS": "5"},
     "scenarios": {"REPRO_BENCH_IMAGES": "120",
                   "REPRO_BENCH_HORIZON": "1600"},
     "serving_mp": {"REPRO_BENCH_IMAGES": "240",

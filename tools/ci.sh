@@ -9,7 +9,7 @@
 #                          benchmark regression gates (tools/check_bench.py
 #                          compares fresh subset_cache/lattice/serving/
 #                          train_driver/scenarios/serving_mp/
-#                          serving_scenarios numbers
+#                          serving_scenarios/roofline numbers
 #                          against the committed benchmarks/results/*.json
 #                          baselines; REPRO_BENCH_TOLERANCE overrides the
 #                          30% gate on noisy runners)
@@ -80,6 +80,12 @@ guarded_suite("test_lattice_eval*.py", "lattice parity suite")
 # the spawn context): slow-marked wholesale, nightly --full runs them
 guarded_suite("test_serving_mp*.py", "process-shard serving suite")
 guarded_suite("test_serving_scenarios*.py", "scenario serving suite")
+# device-resident training: the parity suite trains full drivers for
+# the bit-identical device-vs-host assertions (slow when it does), and
+# the roofline suite compiles/times jitted programs
+guarded_suite("test_device_replay*.py", "device replay parity suite",
+              require_slow_when=lambda src: "run_off_policy" in src)
+guarded_suite("test_roofline*.py", "roofline measurement suite")
 if bad:
     sys.exit("optional dependency imported without a preceding "
              "pytest.importorskip guard (or serving/scenario test "
@@ -99,7 +105,7 @@ fi
 if [[ "$FULL" == 1 ]]; then
     echo "== benchmark regression gates (fresh vs committed baselines) =="
     python tools/check_bench.py subset_cache lattice serving \
-        train_driver scenarios serving_mp serving_scenarios
+        train_driver scenarios serving_mp serving_scenarios roofline
 elif [[ "$HYGIENE" == 1 ]]; then
     echo "== subset-cache smoke benchmark (50 images) =="
     # scratch results dir: the committed baselines under benchmarks/
