@@ -1250,6 +1250,37 @@ def bench_kernels():
 
 # ---------------------------------------------------------------------------
 
+def bench_frontier():
+    """Cost–accuracy frontier: RL vs cascade vs MCT vs hybrid across the
+    scenario suite (``repro.selection.frontier``).  Everything gated is
+    seeded/modeled — curves and dominance invariants are deterministic,
+    machine-invariant quantities, not timings."""
+    import time as _time
+
+    from repro.selection.frontier import run_frontier
+
+    horizon = int(os.environ.get("REPRO_BENCH_FRONTIER_HORIZON", "480"))
+    n_images = min(IMAGES, 96)
+    t0 = _time.time()
+    out = run_frontier(horizon=horizon, n_images=n_images, seed=0,
+                       log=None)
+    out["wall_s"] = round(_time.time() - t0, 1)
+    _save("frontier", out)
+    inv = out["invariants"]
+    for arm in ("rl", "cascade", "hybrid", "mct"):
+        for p in out["frontier"][arm]:
+            _emit(f"frontier/{arm}_knob_{p['knob']}", 0.0,
+                  f"ap50={p['ap50']} cost={p['cost']}")
+    _emit("frontier/invariants", 0.0,
+          f"rl>cheapest={inv['rl_dominates_cheapest']} "
+          f"rl>all={inv['rl_dominates_all_providers']} "
+          f"hybrid>=cascade={inv['hybrid_ge_cascade']}")
+    _emit("frontier/paper_point", 0.0,
+          f"cost_saving={out['paper_point']['cost_saving_frac']} "
+          f"ap50={out['paper_point']['ap50']}")
+    return out
+
+
 BENCHES = {
     "provider_ap": bench_provider_ap,
     "ensemble_combos": bench_ensemble_combos,
@@ -1264,6 +1295,7 @@ BENCHES = {
     "scenarios": bench_scenarios,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
+    "frontier": bench_frontier,
 }
 
 

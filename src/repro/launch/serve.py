@@ -14,6 +14,11 @@ cache shards / ensemble threads, flush at ``--max-batch`` requests or
 
   PYTHONPATH=src python -m repro.launch.serve --federation --async \
       --requests 600 --workers 4 --max-batch 16 --max-wait-ms 2
+
+``--policy {rl,cascade,mct,hybrid}`` swaps the subset-selection policy
+(the RL agent vs the ``repro.selection`` strategies; see
+``docs/policies.md``); all four serve through the identical accounting
+path, sync or async.
 """
 from __future__ import annotations
 
@@ -48,12 +53,25 @@ def run_federation(args) -> int:
         traces = generate_traces(default_providers(), args.images,
                                  seed=args.seed)
         env = ArmolEnv(traces, mode="gt", beta=0.0, seed=args.seed + 1)
-    agent = SAC(SACConfig(state_dim=env.state_dim,
-                          n_providers=env.n_providers, seed=args.seed))
+    if args.policy == "rl":
+        agent = SAC(SACConfig(state_dim=env.state_dim,
+                              n_providers=env.n_providers, seed=args.seed))
+    elif args.policy == "cascade":
+        from repro.selection import CascadeSelector
+        agent = CascadeSelector(env, beta=args.beta)
+    elif args.policy == "mct":
+        from repro.selection import MCTSelector
+        agent = MCTSelector(env, budget=args.budget, seed=args.seed)
+    else:   # hybrid: cascade gate fronting a (freshly initialized) SAC
+        from repro.selection import HybridSelector
+        rl = SAC(SACConfig(state_dim=env.state_dim,
+                           n_providers=env.n_providers, seed=args.seed))
+        agent = HybridSelector(env, rl, beta=args.beta)
     rng = np.random.default_rng(args.seed)
     reqs = [int(i) for i in rng.integers(0, args.images, args.requests)]
     mode = (f"async/{args.shard_backend}" if args.use_async else "sync")
-    print(f"[serve] federation ({mode}): {env.n_providers} providers, "
+    print(f"[serve] federation ({mode}, policy={args.policy}): "
+          f"{env.n_providers} providers, "
           f"{args.images} images, {args.requests} requests"
           + (f", scenario={args.scenario}" if args.scenario else ""))
 
@@ -129,6 +147,17 @@ def main():
                          "depth (deeper queue -> flush sooner)")
     ap.add_argument("--images", type=int, default=120,
                     help="federation: trace-set size")
+    ap.add_argument("--policy", default="rl",
+                    choices=("rl", "cascade", "mct", "hybrid"),
+                    help="federation: subset-selection policy — the RL "
+                         "agent, the calibrated cheap-first cascade, the "
+                         "online budgeted MCT selector, or the cascade "
+                         "gate fronting the RL agent (docs/policies.md)")
+    ap.add_argument("--beta", type=float, default=-0.05,
+                    help="cascade/hybrid: cost weight of the calibration "
+                         "objective (ap50 + beta * fee)")
+    ap.add_argument("--budget", type=float, default=2.0,
+                    help="mct: per-request fee budget (mUSD)")
     ap.add_argument("--scenario", default="",
                     help="federation: serve through a non-stationary "
                          "provider scenario (one schedule step per "

@@ -95,6 +95,7 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
                val_every: int = 50, val_images: int = 24,
                counterfactual_k: int = 3, switch_burst: int = 10,
                seed: int = 0, regime_memory: bool = True,
+               collect_snapshots: bool = False,
                log: Optional[Callable[[str], None]] = print) -> Dict:
     """Stream the whole scenario horizon once, adapting online.
 
@@ -133,7 +134,16 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
     Returns ``{"segments": [...], "summary": {...}}``; ``summary`` keys
     include ``min_recovery_post_switch`` / ``mean_recovery_post_switch``
     (segments 1.. — the acceptance metric for regime-switch recovery) and
-    aggregate cache hit rates.
+    aggregate cache hit rates.  With ``collect_snapshots=True`` the result
+    also carries ``"snapshots"``: one host-copied agent state per segment
+    record — the exact (validated-best) policy each segment was evaluated
+    with — so callers can replay per-segment policies post hoc (the
+    frontier benchmark scores its hybrid arm this way).
+
+    Failure modes: raises ``ValueError`` on ``lanes < 1``; a horizon of 0
+    returns after evaluating segment 0 untouched.  The agent is left with
+    its LIVE (post-training) state — per-segment bests live only in the
+    returned snapshots.
     """
     if lanes < 1:
         raise ValueError(f"lanes must be >= 1, got {lanes}")
@@ -148,6 +158,7 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
     t0 = time.time()
     states = env.reset_lanes(lanes, split="train")
     segments: List[Dict] = []
+    snapshots: List = []
     total = 0
     explore_left = int(start_steps)
     seg = env.segment_index
@@ -204,6 +215,11 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
         if best_state is not None:
             live = _swap_state(agent, best_state)
         rec = evaluate_segment(agent, env, end)
+        if collect_snapshots:
+            # the exact state rec was computed with (validated best, or
+            # the live policy when no snapshot was ever promoted)
+            snapshots.append(best_state if best_state is not None
+                             else _snapshot(agent.state))
         if live is not None:
             agent.state = live
         now = env.pool.agg_core_stats()
@@ -346,4 +362,7 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
             f"min post-switch recovery="
             f"{summary['min_recovery_post_switch']} "
             f"({total} steps, {summary['wall_s']}s)")
-    return {"segments": segments, "summary": summary}
+    out = {"segments": segments, "summary": summary}
+    if collect_snapshots:
+        out["snapshots"] = snapshots
+    return out

@@ -148,9 +148,32 @@ class PoolView:
 class DynamicProviderPool:
     """Applies a :class:`ScenarioSchedule` to a provider roster.
 
+    The pool is the single source of segment-dependent truth (see
+    ``docs/architecture.md``): for any schedule step it answers
+
+      * ``view_at(step)``    — fees, latencies, activity flags, demand
+        weights and cache keys (``PoolView``; a down provider bills 0);
+      * ``traces_at(step)``  — the segment's detection traces (providers
+        regenerate when a switch changes their detection behavior);
+      * ``core_at(step)`` / ``sharded_core_at(step, W)`` /
+        ``snapshot_at(step)`` — the segment's memoized subset-evaluation
+        core, its W-shard serving twin, and the picklable recipe worker
+        processes rebuild it from;
+      * ``oracle(img, step, beta)`` — the per-image best active subset
+        (exact, via the full lattice pass);
+      * ``demand_weights_at(step, imgs)`` — per-image evaluation weights
+        under the segment's demand mix (``None`` = uniform).
+
+    Segments are keyed by fingerprint, so a revisited regime (price back
+    to normal, provider recovered) reuses its existing traces and warm
+    caches instead of rebuilding — ``stats`` counts builds vs reuses.
+
     Thread-safe for the serving path: lazy segment construction (traces,
     cores, sharded cores) happens under one lock, lookups after that are
-    plain dict reads.
+    plain dict reads.  Failure modes: duplicate provider names in the
+    roster (base + scheduled arrivals) raise ``ValueError`` at
+    construction; ``*_at`` lookups past the schedule horizon clamp to
+    the final segment.
     """
 
     def __init__(self, base_providers: Sequence[ProviderProfile],

@@ -1,0 +1,9 @@
+"""Selection policies: non-RL subset selectors behind the agent surface.
+
+See ``docs/policies.md`` for the interface contract and knobs.
+"""
+from repro.selection.base import SelectorPolicy  # noqa: F401
+from repro.selection.cascade import (CascadeSelector,  # noqa: F401
+                                     detection_confidence)
+from repro.selection.hybrid import HybridSelector  # noqa: F401
+from repro.selection.mct import MCTSelector  # noqa: F401

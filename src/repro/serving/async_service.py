@@ -143,6 +143,17 @@ class AsyncFederationService:
 
     # -- client surface --------------------------------------------------
     def submit(self, img_idx: int) -> "Future[FederationResult]":
+        """Enqueue one request; returns immediately.
+
+        Args:  ``img_idx`` — trace image id (int()-able).
+        Returns: a ``concurrent.futures.Future`` resolving to the
+          request's :class:`FederationResult` once its flush is assembled
+          (``.result()`` blocks; ``handle`` is the blocking shorthand).
+        Failure modes: raises ``RuntimeError`` when the service is
+          closed; a failed flush (dead shard worker, evaluation error)
+          sets that exception on every future of the affected flush —
+          the service itself keeps serving subsequent requests.
+        """
         fut: Future = Future()
         with self._cv:
             if self._closed:
@@ -228,7 +239,17 @@ class AsyncFederationService:
             else:
                 core = self.pool.sharded_core_at(clock, self.workers)
                 self.core = core
-        if len(batch) == 1:
+        sel = getattr(self.agent, "select_for_images", None)
+        if sel is not None:
+            # selector policy: decide straight from the image indices —
+            # no feature forward, no padding; the same call the sync
+            # service makes, so both paths are bit-identical by
+            # construction.  The flush clock pins the pool segment.
+            if self.pool is not None:
+                actions = np.asarray(sel(imgs, step=clock), np.float32)
+            else:
+                actions = np.asarray(sel(imgs), np.float32)
+        elif len(batch) == 1:
             # same single-state act path as FederationService.handle, so
             # max_batch=1 is result-identical to the synchronous service
             a, _ = self.agent.select_action(

@@ -1,0 +1,243 @@
+"""Selector policies (repro.selection): accounting parity with the
+serving planes, budget/threshold contracts, and hybrid >= cascade."""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.federation.env import ArmolEnv
+from repro.federation.providers import default_providers
+from repro.federation.traces import generate_traces
+from repro.scenarios import (DynamicProviderPool, NonStationaryArmolEnv,
+                             build_scenario)
+from repro.selection import CascadeSelector, HybridSelector, MCTSelector
+from repro.selection.cascade import detection_confidence
+from repro.selection.frontier import score_masks_fn
+from repro.serving.async_service import AsyncFederationService
+from repro.serving.federation_service import FederationService
+
+PROVS = default_providers()
+N = len(PROVS)
+
+
+def _static_env(n=40, seed=0):
+    traces = generate_traces(PROVS, n, seed=seed)
+    return ArmolEnv(traces, mode="gt", beta=0.0, seed=seed + 1)
+
+
+def _pool_env(name, horizon=120, n=24, seed=0):
+    sch = build_scenario(name, PROVS, horizon=horizon)
+    pool = DynamicProviderPool(PROVS, sch, n_images=n, seed=seed)
+    env = NonStationaryArmolEnv(pool, mode="gt", beta=0.0,
+                                observe_pool=False, seed=seed + 1)
+    return pool, env
+
+
+# -- accounting parity ------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda env: CascadeSelector(env, beta=-0.05),
+    lambda env: MCTSelector(env, budget=2.0, seed=0),
+], ids=["cascade", "mct"])
+def test_selector_sync_async_accounting_parity(make):
+    """launch/serve.py --policy cascade acceptance: the async plane's
+    accounting is bit-identical to the thread-path FederationService for
+    the same selector (same fees, latencies, actions, detections)."""
+    env = _static_env()
+    sel = make(env)
+    imgs = [int(i) for i in env.test_idx[:10]] * 2       # repeats too
+    sync = FederationService(env, sel).handle_many(imgs)
+    with AsyncFederationService(env, sel, max_batch=4, workers=2) as svc:
+        futs = [svc.submit(i) for i in imgs]
+        async_res = [f.result() for f in futs]
+    for a, b in zip(sync, async_res):
+        assert a.cost_milli_usd == b.cost_milli_usd
+        assert a.latency_ms == b.latency_ms
+        np.testing.assert_array_equal(a.action, b.action)
+        np.testing.assert_array_equal(a.detections.boxes,
+                                      b.detections.boxes)
+        np.testing.assert_array_equal(a.detections.scores,
+                                      b.detections.scores)
+
+
+def test_selector_handle_matches_handle_many():
+    env = _static_env()
+    sel = CascadeSelector(env, beta=-0.05)
+    svc = FederationService(env, sel)
+    imgs = [int(i) for i in env.test_idx[:6]]
+    batched = svc.handle_many(imgs)
+    for img, want in zip(imgs, batched):
+        got = svc.handle(img)
+        assert got.cost_milli_usd == want.cost_milli_usd
+        assert got.latency_ms == want.latency_ms
+        np.testing.assert_array_equal(got.action, want.action)
+
+
+def test_selector_fees_match_selected_masks():
+    """Billed fee is exactly the sum of the selected providers' fees —
+    the selector's masks and the service's accounting agree."""
+    env = _static_env()
+    sel = MCTSelector(env, budget=2.0, seed=3)
+    rng = np.random.default_rng(0)
+    imgs = [int(i) for i in env.train_idx[:8]]
+    sel.observe(imgs, sel.explore_masks(imgs), )
+    serve = [int(i) for i in env.test_idx[:12]]
+    masks = sel.select_masks(serve)
+    results = FederationService(env, sel).handle_many(serve)
+    costs = np.asarray(env.costs, np.float64)
+    for m, r in zip(masks, results):
+        want = sum(costs[j] for j in range(N) if int(m) >> j & 1)
+        assert r.cost_milli_usd == pytest.approx(want)
+    del rng
+
+
+def test_selector_shares_the_service_core_cache():
+    """Selectors ride the same SubsetEvaluationCore memo as the service:
+    re-serving the same requests is all hits, no new ensemble work."""
+    env = _static_env()
+    sel = CascadeSelector(env, beta=-0.05)
+    svc = FederationService(env, sel)
+    imgs = [int(i) for i in env.test_idx[:8]]
+    svc.handle_many(imgs)
+    misses = env.core.stats["ens_misses"]
+    hits = env.core.stats["ens_hits"]
+    svc.handle_many(imgs)
+    assert env.core.stats["ens_misses"] == misses
+    assert env.core.stats["ens_hits"] > hits
+
+
+# -- cascade contracts ------------------------------------------------------
+
+def test_cascade_confident_images_pay_base_only():
+    """The gate contract, swept across injected thresholds: once an
+    image's confidence clears the threshold, the cascade serves it with
+    the base provider ALONE — it never pays a second provider."""
+    env = _static_env(n=60)
+    imgs = [int(i) for i in env.test_idx]
+    base = CascadeSelector(env, beta=-0.05)
+    confs = np.asarray([base.confidence(i) for i in imgs])
+    grid = np.unique(np.concatenate([confs, [0.0, 0.35, 0.9, np.inf]]))
+    for th in grid:
+        cas = CascadeSelector(env, beta=-0.05, threshold=float(th))
+        masks = cas.select_masks(imgs)
+        passes = confs >= th
+        np.testing.assert_array_equal(
+            masks[passes], np.full(passes.sum(), cas.base_mask),
+            err_msg=f"threshold={th}: a confident image paid for more "
+                    f"than the base provider")
+        assert all(int(m) & cas.base_mask for m in masks)
+
+
+def test_cascade_base_follows_cheapest_active():
+    """Under an outage the per-segment gate re-bases onto the cheapest
+    ACTIVE provider and keeps escalations inside the active roster."""
+    pool, env = _pool_env("provider_outage", horizon=120, n=16)
+    cas = CascadeSelector(env, beta=-0.05)
+    for step in (0, pool.schedule.horizon // 2, pool.schedule.horizon - 1):
+        view = pool.view_at(step)
+        active_mask = int(sum(1 << j for j in np.flatnonzero(view.active)))
+        _, b, esc = cas.gate(env.test_idx[:4], step=step)
+        assert view.active[b]
+        assert esc & ~active_mask == 0
+        masks = cas.select_masks(env.test_idx[:4], step=step)
+        assert all(int(m) & ~active_mask == 0 for m in masks)
+
+
+def test_detection_confidence_shape():
+    class Dets:
+        def __init__(self, scores):
+            self.scores = np.asarray(scores, np.float32)
+    assert detection_confidence(Dets([])) == 0.0
+    assert detection_confidence(Dets([0.8])) == pytest.approx(0.4)
+    assert detection_confidence(Dets([0.8, 0.6])) == pytest.approx(
+        0.8 * 2 / 3)
+
+
+# -- MCT contracts ----------------------------------------------------------
+
+def test_mct_respects_budget_with_single_floor():
+    env = _static_env(n=40)
+    m = MCTSelector(env, budget=1.5, seed=0)
+    imgs = [int(i) for i in env.train_idx[:16]]
+    m.observe(imgs, m.explore_masks(imgs))
+    costs = np.asarray(env.costs, np.float64)
+    for mk in m.select_masks([int(i) for i in env.test_idx]):
+        mk = int(mk)
+        assert mk != 0                       # never the empty ensemble
+        fee = sum(costs[j] for j in range(N) if mk >> j & 1)
+        assert fee <= 1.5 or bin(mk).count("1") == 1
+
+
+def test_mct_learns_from_counterfactual_replay():
+    """Observing paid subsets moves the regressors off the cold-start
+    cheapest-single answer."""
+    env = _static_env(n=40)
+    m = MCTSelector(env, budget=3.0, seed=0)
+    cold = m.select_masks([int(i) for i in env.test_idx[:6]])
+    assert set(int(c) for c in cold) == {1 << m._cheapest_active(
+        np.asarray(env.costs, np.float64), np.ones(N, bool))}
+    imgs = [int(i) for i in env.train_idx]
+    pairs = m.observe(imgs, np.full(len(imgs), (1 << N) - 1))
+    assert pairs > 0 and m.n_observed == len(imgs)
+    warm = m.select_masks([int(i) for i in env.test_idx[:6]])
+    assert any(bin(int(w)).count("1") > 1 for w in warm)
+
+
+# -- hybrid >= cascade ------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", ["price_war", "provider_outage"])
+def test_hybrid_at_least_cascade_reward(scenario):
+    """The validated escalation choice keeps the hybrid at or above the
+    pure cascade's segment-mean reward — even when the RL arm it fronts
+    is adversarially bad (here: an always-everything policy)."""
+    pool, env = _pool_env(scenario, horizon=160, n=32)
+    beta = -0.1
+    cas = CascadeSelector(env, beta=beta)
+    bad_rl = lambda imgs, step: np.full(len(imgs), (1 << N) - 1, np.int64)
+    hyb = HybridSelector(env, cascade=cas, rl_masks_fn=bad_rl)
+    pt_c = score_masks_fn(
+        env, lambda imgs, step: cas.select_masks(imgs, step=step),
+        beta=beta)
+    pt_h = score_masks_fn(
+        env, lambda imgs, step: hyb.select_masks(imgs, step=step),
+        beta=beta)
+    # calibration-split validation, test-split scoring: allow epsilon
+    assert pt_h["reward"] >= pt_c["reward"] - 0.02
+
+
+def test_hybrid_promotes_a_good_rl_arm():
+    """A strictly-better RL arm (the per-image oracle) must be promoted
+    by the per-segment validation and beat the cascade outright."""
+    pool, env = _pool_env("price_war", horizon=120, n=24)
+    beta = -0.1
+
+    def oracle_masks(imgs, step):
+        return np.asarray([pool.oracle(int(i), int(step or 0), beta,
+                                       against=env._against)[0]
+                           for i in imgs], np.int64)
+
+    cas = CascadeSelector(env, beta=beta)
+    hyb = HybridSelector(env, cascade=cas, rl_masks_fn=oracle_masks)
+    pt_c = score_masks_fn(
+        env, lambda imgs, step: cas.select_masks(imgs, step=step),
+        beta=beta)
+    pt_h = score_masks_fn(
+        env, lambda imgs, step: hyb.select_masks(imgs, step=step),
+        beta=beta)
+    assert pt_h["reward"] >= pt_c["reward"] - 1e-9
+
+
+def test_selector_state_adapters_roundtrip():
+    """select_action/select_action_batch recover the image from the
+    feature row, so agent_policy/evaluate_policy work unchanged."""
+    env = _static_env()
+    cas = CascadeSelector(env, beta=-0.05)
+    imgs = [int(i) for i in env.test_idx[:5]]
+    via_states, _ = cas.select_action_batch(env.features[np.asarray(imgs)])
+    direct = cas.select_for_images(imgs)
+    np.testing.assert_array_equal(via_states, direct)
+    one, aux = cas.select_action(env.features[imgs[0]])
+    assert aux is None
+    np.testing.assert_array_equal(one, direct[0])
+    with pytest.raises(KeyError):
+        cas.select_action(np.full(env.state_dim, -123.0, np.float32))

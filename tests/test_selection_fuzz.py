@@ -1,0 +1,51 @@
+"""Property-based cascade contracts (hypothesis).
+
+The deterministic sweep in ``test_selection.py`` covers the observed
+confidence values; here hypothesis drives arbitrary thresholds, betas
+and trace seeds at the same contract: the cascade NEVER pays for a
+second provider once an image's confidence clears the threshold, and
+every served subset contains the base provider.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.federation.env import ArmolEnv
+from repro.federation.providers import default_providers
+from repro.federation.traces import generate_traces
+from repro.selection import CascadeSelector
+
+PROVS = default_providers()
+_ENVS = {}
+
+
+def _env(seed: int) -> ArmolEnv:
+    if seed not in _ENVS:
+        traces = generate_traces(PROVS, 30, seed=seed)
+        _ENVS[seed] = ArmolEnv(traces, mode="gt", beta=0.0, seed=seed + 1)
+    return _ENVS[seed]
+
+
+@settings(max_examples=40, deadline=None)
+@given(threshold=st.one_of(st.floats(0.0, 1.2), st.just(float("inf"))),
+       beta=st.floats(-1.0, 0.0),
+       seed=st.integers(0, 3))
+def test_cascade_never_pays_past_a_passing_threshold(threshold, beta,
+                                                     seed):
+    env = _env(seed)
+    cas = CascadeSelector(env, beta=beta, threshold=threshold)
+    imgs = [int(i) for i in env.test_idx]
+    confs = np.asarray([cas.confidence(i) for i in imgs])
+    masks = cas.select_masks(imgs)
+    for conf, mask in zip(confs, masks):
+        mask = int(mask)
+        assert mask & cas.base_mask, "every subset contains the base"
+        if conf >= cas.threshold:
+            assert mask == cas.base_mask, (
+                f"confidence {conf} passed threshold {cas.threshold} but "
+                f"the cascade paid for mask {mask:b}")

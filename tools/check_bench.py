@@ -109,6 +109,16 @@ GATES = {
         Gate("provider_outage.cost_per_request", "lower"),
         Gate("price_war.worst_p99_ms", "lower"),
         Gate("price_war.cost_per_request", "lower")],
+    # cost-accuracy frontier dominance invariants: 1.0/0.0 flags (some
+    # RL point matches the cheapest single's cost / the all-providers
+    # accuracy within the recorded eps margins; hybrid earns >= cascade
+    # reward at every shared beta) plus the paper operating point's fee
+    # saving at matched accuracy.  Every input is seeded/modeled — no
+    # wall clock anywhere — so these are machine-invariant quantities
+    "frontier": [Gate("invariants.rl_dominates_cheapest"),
+                 Gate("invariants.rl_dominates_all_providers"),
+                 Gate("invariants.hybrid_ge_cascade"),
+                 Gate("paper_point.cost_saving_frac")],
 }
 
 BENCH_ENV = {
@@ -127,6 +137,8 @@ BENCH_ENV = {
                           "REPRO_BENCH_REQUESTS": "600",
                           "REPRO_BENCH_MAX_BATCH": "16",
                           "REPRO_BENCH_WORKERS": "4"},
+    "frontier": {"REPRO_BENCH_IMAGES": "96",
+                 "REPRO_BENCH_FRONTIER_HORIZON": "480"},
 }
 
 DEFAULT = ["subset_cache", "serving"]

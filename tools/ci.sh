@@ -2,14 +2,20 @@
 # CI entry point.
 #
 #   tools/ci.sh            tier-1 lane: import hygiene, fast tests
-#                          (-m "not slow"), subset-cache smoke benchmark
+#                          (-m "not slow"), docs check, subset-cache
+#                          smoke benchmark
 #   tools/ci.sh --tests    tier-1 tests only        (matrix job: tests)
 #   tools/ci.sh --hygiene  hygiene + smoke bench    (matrix job: hygiene)
+#   tools/ci.sh --docs     docs lane: intra-repo link check (anchors
+#                          included) and every committed
+#                          benchmarks/results/*.json baseline must be
+#                          referenced from README.md or docs/
+#                          (matrix job: docs)
 #   tools/ci.sh --full     everything: slow driver/serving tests + the
 #                          benchmark regression gates (tools/check_bench.py
 #                          compares fresh subset_cache/lattice/serving/
 #                          train_driver/scenarios/serving_mp/
-#                          serving_scenarios/roofline numbers
+#                          serving_scenarios/roofline/frontier numbers
 #                          against the committed benchmarks/results/*.json
 #                          baselines; REPRO_BENCH_TOLERANCE overrides the
 #                          30% gate on noisy runners)
@@ -18,13 +24,15 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-FULL=0 TESTS=1 HYGIENE=1
+FULL=0 TESTS=1 HYGIENE=1 DOCS=1
 case "${1:-}" in
     --full)    FULL=1 ;;
-    --tests)   HYGIENE=0 ;;
-    --hygiene) TESTS=0 ;;
+    --tests)   HYGIENE=0 DOCS=0 ;;
+    --hygiene) TESTS=0 DOCS=0 ;;
+    --docs)    TESTS=0 HYGIENE=0 ;;
     "") ;;
-    *) echo "usage: tools/ci.sh [--full|--tests|--hygiene]" >&2; exit 2 ;;
+    *) echo "usage: tools/ci.sh [--full|--tests|--hygiene|--docs]" >&2
+       exit 2 ;;
 esac
 
 if [[ "$HYGIENE" == 1 ]]; then
@@ -86,11 +94,72 @@ guarded_suite("test_serving_scenarios*.py", "scenario serving suite")
 guarded_suite("test_device_replay*.py", "device replay parity suite",
               require_slow_when=lambda src: "run_off_policy" in src)
 guarded_suite("test_roofline*.py", "roofline measurement suite")
+# selector policies (cascade/MCT/hybrid) spin serving planes and score
+# scenario segments; anything training RL arms online must be slow
+guarded_suite("test_selection*.py", "selector policy suite",
+              require_slow_when=lambda src: "run_online" in src)
 if bad:
     sys.exit("optional dependency imported without a preceding "
              "pytest.importorskip guard (or serving/scenario test "
              "hygiene violation): " + ", ".join(bad))
 print("ok")
+PY
+fi
+
+if [[ "$DOCS" == 1 || "$FULL" == 1 ]]; then
+echo "== docs: intra-repo links + baseline coverage =="
+python - <<'PY'
+import functools
+import pathlib
+import re
+import sys
+
+root = pathlib.Path(".")
+pages = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+bad = []
+
+
+def slug(heading):
+    """GitHub's heading -> anchor rule: lowercase, drop punctuation,
+    spaces to hyphens."""
+    heading = re.sub(r"[^\w\- ]", "", heading.strip().lower())
+    return heading.replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def anchors_of(path):
+    text = pathlib.Path(path).read_text()
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return {slug(m.group(1))
+            for m in re.finditer(r"^#{1,6}\s+(.*)$", text, re.M)}
+
+
+LINK = re.compile(r"\]\(([^)\s]+)\)")
+for page in pages:
+    text = re.sub(r"```.*?```", "", page.read_text(), flags=re.S)
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = page if not path_part else \
+            (page.parent / path_part).resolve()
+        if not dest.exists():
+            bad.append(f"{page}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md" and \
+                anchor not in anchors_of(str(dest)):
+            bad.append(f"{page}: broken anchor -> {target}")
+
+# every committed baseline must be documented somewhere a reader looks
+corpus = "\n".join(p.read_text() for p in pages)
+for res in sorted((root / "benchmarks" / "results").glob("*.json")):
+    if res.stem not in corpus:
+        bad.append(f"benchmarks/results/{res.name}: baseline not "
+                   "referenced in README.md or docs/")
+
+if bad:
+    sys.exit("docs check failed:\n  " + "\n  ".join(bad))
+print(f"ok ({len(pages)} pages)")
 PY
 fi
 
@@ -105,7 +174,8 @@ fi
 if [[ "$FULL" == 1 ]]; then
     echo "== benchmark regression gates (fresh vs committed baselines) =="
     python tools/check_bench.py subset_cache lattice serving \
-        train_driver scenarios serving_mp serving_scenarios roofline
+        train_driver scenarios serving_mp serving_scenarios roofline \
+        frontier
 elif [[ "$HYGIENE" == 1 ]]; then
     echo "== subset-cache smoke benchmark (50 images) =="
     # scratch results dir: the committed baselines under benchmarks/
