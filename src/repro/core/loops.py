@@ -195,7 +195,8 @@ def run_off_policy(agent, env: ArmolEnv, *, lanes: int = 1, epochs: int = 5,
                    update_every: int = 50, update_iters: int = 50,
                    buffer_capacity: int = 100_000, seed: int = 0,
                    log: Optional[Callable[[str], None]] = print,
-                   buffer: Optional[ReplayBuffer] = None) -> List[Dict]:
+                   buffer: Optional[ReplayBuffer] = None,
+                   obs=None) -> List[Dict]:
     """Multi-lane off-policy driver.
 
     ``lanes`` parallel episode cursors advance through
@@ -220,6 +221,15 @@ def run_off_policy(agent, env: ArmolEnv, *, lanes: int = 1, epochs: int = 5,
     """
     if lanes < 1:
         raise ValueError(f"lanes must be >= 1, got {lanes}")
+    # observability (repro.obs.Obs): tick latency, update_block
+    # throughput and replay occupancy — reads clocks and copies values
+    # only, so training results are bit-identical with obs on or off
+    _obs_on = obs is not None and obs.enabled
+    if _obs_on:
+        _h_tick = obs.metrics.histogram("train.tick_ms")
+        _h_blk = obs.metrics.histogram("train.update_block_ms")
+        _g_occ = obs.metrics.gauge("train.replay_occupancy")
+        _c_upd = obs.metrics.counter("train.update_iters")
     rng = np.random.default_rng(seed)
     buf = buffer if buffer is not None else \
         ReplayBuffer(buffer_capacity, env.state_dim, env.n_providers,
@@ -235,6 +245,7 @@ def run_off_policy(agent, env: ArmolEnv, *, lanes: int = 1, epochs: int = 5,
     for epoch in range(epochs):
         t0 = time.time()
         for _ in range(-(-steps_per_epoch // lanes)):
+            _tick_t0 = time.monotonic() if _obs_on else 0.0
             explore = (total + np.arange(lanes)) < start_steps
             acts = np.zeros((lanes, n), np.float32)
             for lane in np.flatnonzero(explore):
@@ -274,6 +285,7 @@ def run_off_policy(agent, env: ArmolEnv, *, lanes: int = 1, epochs: int = 5,
                         f"update is scheduled at step {k * update_every} "
                         "but no transitions have been stored "
                         f"(update_after={update_after})")
+                _blk_t0 = time.monotonic() if _obs_on else 0.0
                 if update_block is not None:
                     blk = buf.sample_block(update_iters, batch_size)
                     if device_buf:
@@ -286,10 +298,20 @@ def run_off_policy(agent, env: ArmolEnv, *, lanes: int = 1, epochs: int = 5,
                 else:
                     for _ in range(update_iters):
                         agent.update(buf.sample(batch_size))
+                if _obs_on:
+                    _c_upd.inc(update_iters)
+                    _h_blk.observe((time.monotonic() - _blk_t0) * 1e3)
+            if _obs_on:
+                _g_occ.set(len(buf))
+                _h_tick.observe((time.monotonic() - _tick_t0) * 1e3)
         res = evaluate_policy(agent_policy(agent), env)
         res.update({"epoch": epoch, "steps": total,
                     "wall_s": round(time.time() - t0, 1)})
         history.append(res)
+        if _obs_on:
+            obs.event("epoch", epoch=epoch, steps=total,
+                      ap50=res["ap50"], cost=res["cost"],
+                      wall_s=res["wall_s"])
         if log:
             log(f"[{type(agent).__name__}x{lanes}] epoch {epoch}: "
                 f"AP50={res['ap50']:.2f} mAP={res['map']:.2f} "

@@ -36,6 +36,11 @@ def run_federation(args) -> int:
     from repro.serving.async_service import AsyncFederationService
     from repro.serving.federation_service import FederationService
 
+    obs = None
+    if args.obs_dir:
+        from repro.obs import Obs
+        obs = Obs(args.obs_dir, trace_sample=args.trace_sample,
+                  seed=args.seed)
     pool = None
     if args.scenario:
         from repro.scenarios import (DynamicProviderPool,
@@ -80,11 +85,17 @@ def run_federation(args) -> int:
                 env, agent, max_batch=args.max_batch,
                 max_wait_ms=args.max_wait_ms, adaptive=args.adaptive,
                 workers=args.workers, pool=pool,
-                shard_backend=args.shard_backend) as svc:
+                shard_backend=args.shard_backend, obs=obs) as svc:
             svc.handle_many(reqs[:args.max_batch])      # warm jit + shards
             svc.reset_stats()
             if pool is not None:
                 svc.set_clock(0)    # warm-up must not consume the schedule
+            if obs is not None:
+                # open AFTER warm-up so the log covers only measured
+                # traffic; gt mode scores each record's ensemble AP50
+                obs.open_serving_log(
+                    [p.name for p in env.traces.providers],
+                    env.traces.gts if env.mode == "gt" else None)
             t0 = time.time()
             futures = [svc.submit(i) for i in reqs]
             results = [f.result() for f in futures]
@@ -95,13 +106,21 @@ def run_federation(args) -> int:
             if pool is not None:
                 extra += (f" segments="
                           f"{pool.schedule.segment_index(svc.clock) + 1}")
+            if obs is not None:
+                obs.write_metrics(svc.extra_metric_snapshots())
     else:
-        svc = FederationService(env, agent)
+        svc = FederationService(env, agent, obs=obs)
         svc.handle(reqs[0])                             # warm jit
+        if obs is not None:
+            obs.open_serving_log(
+                [p.name for p in env.traces.providers],
+                env.traces.gts if env.mode == "gt" else None)
         t0 = time.time()
         results = [svc.handle(i) for i in reqs]
         dt = time.time() - t0
         extra = ""
+        if obs is not None:
+            obs.write_metrics()
 
     cost = sum(r.cost_milli_usd for r in results)
     lat = np.asarray([r.latency_ms for r in results])
@@ -110,6 +129,11 @@ def run_federation(args) -> int:
     print(f"[serve] accounted cost={cost:.1f} mUSD, modeled latency "
           f"p50={np.percentile(lat, 50):.0f}ms "
           f"p99={np.percentile(lat, 99):.0f}ms")
+    if obs is not None:
+        obs.close()
+        print(f"[serve] observability artifacts in {args.obs_dir} "
+              f"(render: python -m repro.launch.obs_report "
+              f"{args.obs_dir})")
     return 0
 
 
@@ -162,6 +186,14 @@ def main():
                     help="federation: serve through a non-stationary "
                          "provider scenario (one schedule step per "
                          "request; implies --async)")
+    ap.add_argument("--obs-dir", default="",
+                    help="federation: write observability artifacts "
+                         "(metrics.json, serving_log.jsonl, trace.jsonl) "
+                         "to this directory; results are bit-identical "
+                         "with or without it")
+    ap.add_argument("--trace-sample", type=float, default=0.0,
+                    help="fraction of requests traced through the async "
+                         "plane (0 = tracing off/free; needs --obs-dir)")
     args = ap.parse_args()
 
     if args.requests is None:

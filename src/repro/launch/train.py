@@ -63,14 +63,35 @@ def run_scenario(args) -> int:
               lr=3e-4, gamma=0.0, hidden=(32, 32), seed=args.seed)
     agent = TD3(TD3Config(**kw)) if args.algo == "td3" \
         else SAC(SACConfig(alpha=0.02, **kw))
-    res = run_online(agent, env, lanes=args.lanes, seed=args.seed)
+    obs = _make_obs(args)
+    res = run_online(agent, env, lanes=args.lanes, seed=args.seed,
+                     obs=obs)
     s = res["summary"]
     print(f"[train] scenario done: min post-switch recovery="
           f"{s['min_recovery_post_switch']} mean="
           f"{s['mean_recovery_post_switch']} "
           f"cache_hit={s['mean_cache_hit_rate']} ({s['steps']} steps, "
           f"{s['wall_s']}s)")
+    _finish_obs(obs, args)
     return 0
+
+
+def _make_obs(args):
+    """Build the run's ``repro.obs.Obs`` handle from ``--obs-dir`` (or
+    ``None`` — every driver treats that as observability off)."""
+    if not getattr(args, "obs_dir", ""):
+        return None
+    from repro.obs import Obs
+    return Obs(args.obs_dir, seed=args.seed)
+
+
+def _finish_obs(obs, args) -> None:
+    if obs is None:
+        return
+    obs.write_metrics()
+    obs.close()
+    print(f"[train] observability artifacts in {args.obs_dir} "
+          f"(render: python -m repro.launch.obs_report {args.obs_dir})")
 
 
 def run_federation(args) -> int:
@@ -103,10 +124,13 @@ def run_federation(args) -> int:
             else (SAC, SACConfig)
         agent = cls(cfg_cls(state_dim=env.state_dim,
                             n_providers=env.n_providers, seed=args.seed))
+        obs = _make_obs(args)
         hist = run_off_policy(agent, env, lanes=args.lanes,
                               epochs=args.epochs,
-                              steps_per_epoch=args.steps, seed=args.seed)
+                              steps_per_epoch=args.steps, seed=args.seed,
+                              obs=obs)
         total = hist[-1]["steps"]
+        _finish_obs(obs, args)
     dt = time.time() - t0
     last = hist[-1]
     print(f"[train] done: AP50={last['ap50']:.2f} cost={last['cost']:.3f} "
@@ -147,6 +171,10 @@ def main():
     ap.add_argument("--blind", action="store_true",
                     help="scenario: hide provider status/fees from the "
                          "state (adaptation from reward alone)")
+    ap.add_argument("--obs-dir", default="",
+                    help="write observability artifacts (metrics.json, "
+                         "events.jsonl) to this directory; training "
+                         "results are bit-identical with or without it")
     args = ap.parse_args()
 
     if args.federation:
@@ -172,10 +200,16 @@ def main():
     step_fn = jax.jit(make_train_step(model, peak_lr=args.lr,
                                       total_steps=args.steps))
     data = synthetic_lm_batches(cfg, args.batch, args.seq, seed=args.seed)
+    obs = _make_obs(args)
+    h_step = obs.metrics.histogram("train.lm_step_ms") \
+        if obs is not None else None
     t0 = time.time()
     for step in range(args.steps):
+        st0 = time.monotonic() if h_step is not None else 0.0
         batch = {k: jnp.asarray(v) for k, v in next(data).items()}
         state, metrics = step_fn(state, batch)
+        if h_step is not None:
+            h_step.observe((time.monotonic() - st0) * 1e3)
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"  step {step:4d} loss={float(metrics['loss']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} "
@@ -184,6 +218,7 @@ def main():
     if args.ckpt:
         save_pytree(args.ckpt, state.params)
         print(f"[train] saved params to {args.ckpt}")
+    _finish_obs(obs, args)
     return 0
 
 

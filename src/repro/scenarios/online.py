@@ -96,7 +96,8 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
                counterfactual_k: int = 3, switch_burst: int = 10,
                seed: int = 0, regime_memory: bool = True,
                collect_snapshots: bool = False,
-               log: Optional[Callable[[str], None]] = print) -> Dict:
+               log: Optional[Callable[[str], None]] = print,
+               obs=None) -> Dict:
     """Stream the whole scenario horizon once, adapting online.
 
     Four deployment-shaped mechanisms beyond plain continual training:
@@ -147,6 +148,16 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
     """
     if lanes < 1:
         raise ValueError(f"lanes must be >= 1, got {lanes}")
+    # observability (repro.obs.Obs): structured events for every segment
+    # close / regime switch (machine-readable twins of the ``log`` lines)
+    # plus tick-latency / replay-occupancy / update-count metrics.  Obs
+    # only reads clocks and copies already-computed values — results are
+    # bit-identical with it on or off (tests/test_obs_parity.py).
+    _obs_on = obs is not None and obs.enabled
+    if _obs_on:
+        _h_tick = obs.metrics.histogram("train.tick_ms")
+        _g_occ = obs.metrics.gauge("train.replay_occupancy")
+        _c_upd = obs.metrics.counter("train.update_iters")
     rng = np.random.default_rng(seed)
     buf = ReplayBuffer(buffer_capacity, env.state_dim, env.n_providers,
                        seed=seed)
@@ -229,6 +240,8 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
         rec["steps_seen"] = total
         rec["val_reward"] = round(best_val, 4)
         segments.append(rec)
+        if _obs_on:
+            obs.event("segment_close", **rec)
         if log:
             log(f"[online] seg {finished_seg}: reward={rec['reward']:.3f} "
                 f"oracle={rec['oracle_reward']:.3f} "
@@ -237,6 +250,7 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
                 f"cache_hit={rec['cache_hit_rate']:.2%}")
 
     while env.clock < env.horizon:
+        _tick_t0 = time.monotonic() if _obs_on else 0.0
         acts = np.zeros((lanes, n), np.float32)
         explore = np.zeros(lanes, bool)
         if explore_left > 0:
@@ -295,6 +309,8 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
             else:
                 for _ in range(update_iters):
                     agent.update(buf.sample(batch_size))
+            if _obs_on:
+                _c_upd.inc(update_iters)
         if total >= next_val and total >= start_steps:
             # score at the PRE-tick clock: on a boundary-crossing tick the
             # promotion target is still the old segment's best_state, and
@@ -304,6 +320,7 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
         if infos["switched"]:
             # close every segment the tick crossed (ticks can straddle
             # more than one boundary at extreme lane counts)
+            old_seg = seg
             for s in range(seg, env.segment_index):
                 _close_segment(s)
             seg = env.segment_index
@@ -314,17 +331,26 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
                 snap_stash[cur_view.econ_key] = best_state
             if not regime_memory:
                 buf.size = buf.ptr = 0
+                buf_action = "flush"
             elif new_view.dets_key == cur_view.dets_key:
                 _relabel(buf, cur_view, new_view)   # economics-only switch
+                buf_action = "fee_relabel"
             else:
                 buf_stash[cur_view.dets_key] = (buf, cur_view)
                 stashed = buf_stash.pop(new_view.dets_key, None)
                 if stashed is None:
                     buf = ReplayBuffer(buffer_capacity, env.state_dim,
                                        env.n_providers, seed=seed + seg)
+                    buf_action = "fresh"
                 else:
                     buf, labeled_view = stashed
                     _relabel(buf, labeled_view, new_view)
+                    buf_action = "stash_restore"
+            if _obs_on:
+                obs.event("regime_switch", from_seg=old_seg, to_seg=seg,
+                          clock=int(env.clock),
+                          econ_only=new_view.dets_key == cur_view.dets_key,
+                          buffer=buf_action, buffer_size=int(buf.size))
             cur_view = new_view
             # replay burst: the buffer is exact data for the new regime
             # (relabeled fees / restored regime memory) — retrain on it
@@ -342,6 +368,9 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
             if prior is not None:   # best known policy for this regime
                 best_val, best_state = _score_state(prior), prior
             _validate()             # give the post-burst policy a shot
+        if _obs_on:
+            _g_occ.set(buf.size)
+            _h_tick.observe((time.monotonic() - _tick_t0) * 1e3)
     _close_segment(seg)
 
     post = [s["recovery"] for s in segments if s["seg"] >= 1]
@@ -357,6 +386,9 @@ def run_online(agent, env: NonStationaryArmolEnv, *, lanes: int = 4,
         "wall_s": round(time.time() - t0, 1),
         "pool": env.pool.cache_report(),
     }
+    if _obs_on:
+        obs.event("scenario_summary",
+                  **{k: v for k, v in summary.items() if k != "pool"})
     if log:
         log(f"[online] {summary['scenario']}: "
             f"min post-switch recovery="

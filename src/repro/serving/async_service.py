@@ -45,8 +45,16 @@ import numpy as np
 
 from repro.federation.env import ArmolEnv
 from repro.federation.evaluation import ShardedSubsetEvaluationCore
+from repro.obs.metrics import MetricsRegistry, counters_snapshot, \
+    merge_snapshots
+from repro.obs.tracing import NULL_SPAN
 from repro.serving.federation_service import (FederationResult,
                                               FederationService)
+
+# the dict-shaped stats contract: key order and names are part of the
+# public accessor (tests and benches read these directly)
+_STAT_KEYS = ("requests", "flushes", "batched_requests", "max_flush",
+              "flush_full", "flush_timeout", "flush_drain")
 
 
 class AsyncFederationService:
@@ -81,7 +89,7 @@ class AsyncFederationService:
                  max_wait_ms: float = 2.0, workers: int = 2,
                  adaptive: bool = False, pool=None,
                  shard_backend: str = "thread",
-                 mp_context: str = "spawn"):
+                 mp_context: str = "spawn", obs=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if shard_backend not in ("thread", "process"):
@@ -124,15 +132,38 @@ class AsyncFederationService:
         self._policy = agent_policy(agent, deterministic=deterministic)
 
         self._cv = threading.Condition()
-        self._queue: deque = deque()    # (img_idx, enqueue_t, future)
+        self._queue: deque = deque()  # (img_idx, enqueue_t, future, trace)
         self._closed = False
-        # flush_full/flush_timeout/flush_drain: WHY each flush fired —
-        # queue hit max_batch, the oldest request's deadline expired, or
-        # close() drained the queue.  Tests assert on these instead of
+        # observability: the service's flush counters live on a metrics
+        # registry (the obs handle's when given — so serve-level metrics
+        # land in its metrics.json — else a private always-on one, which
+        # keeps the ``stats`` accessor live with obs off).  flush_full /
+        # flush_timeout/flush_drain: WHY each flush fired — queue hit
+        # max_batch, the oldest request's deadline expired, or close()
+        # drained the queue.  Tests assert on these instead of
         # wall-clock sleeps (timer behavior without timing flakiness).
-        self.stats = {"requests": 0, "flushes": 0, "batched_requests": 0,
-                      "max_flush": 0, "flush_full": 0, "flush_timeout": 0,
-                      "flush_drain": 0}
+        self.obs = obs
+        self._obs_on = obs is not None and obs.enabled
+        self._metrics = obs.metrics if self._obs_on else MetricsRegistry()
+        self._tracer = obs.tracer if self._obs_on else None
+        if self._tracer is not None and not self._tracer.enabled:
+            self._tracer = None
+        self._svc.obs = obs
+        self._stat = {k: (self._metrics.gauge("serving." + k)
+                          if k == "max_flush"
+                          else self._metrics.counter("serving." + k))
+                      for k in _STAT_KEYS}
+        if self._obs_on:
+            self._h_flush_size = self._metrics.histogram(
+                "serving.flush_size",
+                bounds=tuple(float(b) for b in range(1, 65)))
+            self._h_queue_wait = self._metrics.histogram(
+                "serving.queue_wait_ms")
+        if self.shard_backend == "process":
+            # per-shard RPC latency histograms + condemned-shard counter
+            # always land in the service's registry; worker-shipped spans
+            # only when tracing is on
+            self.core.bind_obs(self._metrics, self._tracer)
         self._shard_pools = [
             ThreadPoolExecutor(max_workers=1,
                                thread_name_prefix=f"fed-shard-{i}")
@@ -155,11 +186,28 @@ class AsyncFederationService:
           the service itself keeps serving subsequent requests.
         """
         fut: Future = Future()
+        tid = self._tracer.sample_request() if self._tracer is not None \
+            else None
         with self._cv:
             if self._closed:
                 raise RuntimeError("AsyncFederationService is closed")
-            self._queue.append((int(img_idx), time.monotonic(), fut))
+            self._queue.append((int(img_idx), time.monotonic(), fut, tid))
             self._cv.notify()
+        if tid is not None:
+            # the request span: enqueue -> future resolution (covers the
+            # queue wait, the flush, the shard RPC and assembly)
+            t_sub = time.monotonic()
+            ts = time.time()
+            img = int(img_idx)
+
+            def _done(f, tid=tid, t_sub=t_sub, ts=ts, img=img):
+                self._tracer.record({
+                    "name": "request", "trace": tid, "span": tid,
+                    "parent": None, "ts": ts,
+                    "dur_ms": (time.monotonic() - t_sub) * 1e3,
+                    "attrs": {"img": img,
+                              "error": f.exception() is not None}})
+            fut.add_done_callback(_done)
         return fut
 
     def handle(self, img_idx: int) -> FederationResult:
@@ -217,11 +265,12 @@ class AsyncFederationService:
             try:
                 self._flush(batch, clock, reason)
             except BaseException as e:   # keep serving after a bad flush
-                for _, _, fut in batch:
+                for _, _, fut, _ in batch:
                     if not fut.done():
                         fut.set_exception(e)
 
     def _flush(self, batch, clock: int, reason: str = "flush_full") -> None:
+        t0 = time.monotonic() if self._tracer is not None else 0.0
         imgs = np.asarray([b[0] for b in batch], np.int64)
         costs = lats = None
         snapshot = None
@@ -270,13 +319,43 @@ class AsyncFederationService:
             actions = np.asarray(self._policy.select_batch(feats),
                                  np.float32)[:len(batch)]
         with self._cv:      # counters race with reset_stats() otherwise
-            self.stats["flushes"] += 1
-            self.stats[reason] += 1
-            self.stats["requests"] += len(batch)
+            self._stat["flushes"].inc()
+            self._stat[reason].inc()
+            self._stat["requests"].inc(len(batch))
             if len(batch) > 1:
-                self.stats["batched_requests"] += len(batch)
-            self.stats["max_flush"] = max(self.stats["max_flush"],
-                                          len(batch))
+                self._stat["batched_requests"].inc(len(batch))
+            self._stat["max_flush"].set_max(len(batch))
+        if self._obs_on:
+            now = time.monotonic()
+            self._h_flush_size.observe(len(batch))
+            self._h_queue_wait.observe_batch(
+                [(now - b[1]) * 1e3 for b in batch])
+        # span + log context for the fan-out: the flush span hangs off
+        # the first sampled request of the batch (reason, size, clock);
+        # the serving log gets the flush's segment/reason.  Both are
+        # None-cheap when obs is off.
+        trace_ctx = None
+        if self._tracer is not None:
+            tids = [b[3] for b in batch if b[3] is not None]
+            if tids:
+                # the flush span covers the agent decision + routing; the
+                # per-shard RPC/assembly hangs off it as child spans
+                dur_ms = (time.monotonic() - t0) * 1e3
+                span_id = self._tracer._next_span_id()
+                self._tracer.record({
+                    "name": "flush", "trace": tids[0], "span": span_id,
+                    "parent": tids[0], "ts": time.time() - dur_ms / 1e3,
+                    "dur_ms": dur_ms,
+                    "attrs": {"reason": reason, "size": len(batch),
+                              "clock": int(clock),
+                              "n_traced": len(tids)}})
+                trace_ctx = (tids[0], span_id)
+        log_ctx = None
+        if self.obs is not None and self.obs.serving_log is not None:
+            seg = None if self.pool is None else \
+                int(self.pool.schedule.segment_index(clock))
+            log_ctx = {"seg": seg, "clock": int(clock), "reason": reason,
+                       "backend": self.shard_backend, "costs": costs}
         # fan out by home shard; the dispatcher does NOT wait — ensemble
         # assembly overlaps the next flush's agent forward
         if self.shard_backend == "process":
@@ -288,13 +367,13 @@ class AsyncFederationService:
                 self._shard_pools[sid].submit(
                     self._account_shard_mp, core, sid,
                     [batch[p] for p in positions], positions, snapshot,
-                    acts, n_sel, masks, cost, lat)
+                    acts, n_sel, masks, cost, lat, trace_ctx, log_ctx)
         else:
             for sid, positions in self._partition(imgs).items():
                 self._shard_pools[sid].submit(
                     self._account_shard, core, sid,
                     [batch[p] for p in positions], actions[positions],
-                    costs, lats)
+                    costs, lats, trace_ctx, log_ctx)
 
     def _partition(self, imgs: np.ndarray):
         groups: dict = {}
@@ -302,43 +381,72 @@ class AsyncFederationService:
             groups.setdefault(self.core.shard_id(img), []).append(pos)
         return groups
 
+    def _trace_parent(self, trace_ctx):
+        """The (trace_id, parent_span_id) a shard-side span hangs off —
+        ``(None, None)`` when this flush carries no sampled request."""
+        if self._tracer is None or trace_ctx is None:
+            return None, None
+        return trace_ctx
+
     def _account_shard(self, core, sid: int, items, actions: np.ndarray,
-                       costs, lats) -> None:
+                       costs, lats, trace_ctx=None, log_ctx=None) -> None:
         """Runs on shard ``sid``'s dedicated thread — the only thread that
         ever touches that shard's dicts (for the flush's captured core)."""
+        tid, parent = self._trace_parent(trace_ctx)
         try:
-            shard = core.shards[sid]
-            imgs = [it[0] for it in items]
-            shard.precompute(imgs)      # one batched IoU launch per shard
-            results = self._svc._account_batch(imgs, actions, core=shard,
-                                               costs=costs,
-                                               latency_ms=lats)
-            for (_, _, fut), res in zip(items, results):
+            with self._tracer.span("shard_assemble", tid, parent=parent,
+                                   shard=sid, n=len(items)) \
+                    if tid is not None else NULL_SPAN:
+                shard = core.shards[sid]
+                imgs = [it[0] for it in items]
+                shard.precompute(imgs)  # one batched IoU launch per shard
+                results = self._svc._account_batch(
+                    imgs, actions, core=shard, costs=costs,
+                    latency_ms=lats, log_ctx=log_ctx)
+            for (_, _, fut, _), res in zip(items, results):
                 fut.set_result(res)
         except BaseException as e:
-            for _, _, fut in items:
+            for _, _, fut, _ in items:
                 if not fut.done():
                     fut.set_exception(e)
 
     def _account_shard_mp(self, core, sid: int, items, positions,
-                          snapshot, acts, n_sel, masks, cost,
-                          lat) -> None:
+                          snapshot, acts, n_sel, masks, cost, lat,
+                          trace_ctx=None, log_ctx=None) -> None:
         """Process-backend twin of ``_account_shard``: runs on shard
         ``sid``'s parent-side thread, which owns that worker's pipe for
         the duration (one batched RPC per flush per shard).  Accounting
         was already routed in the dispatcher; only ensembles come back.
         A dead worker fails this shard's futures cleanly — other shards
         and the dispatcher keep serving."""
+        tid, parent = self._trace_parent(trace_ctx)
         try:
-            imgs = [it[0] for it in items]
-            ens = core.eval_on(sid, imgs, masks[positions], snapshot)
-            results = self._svc._results_from_ensembles(
-                acts[positions], n_sel[positions], cost[positions],
-                lat[positions], ens)
-            for (_, _, fut), res in zip(items, results):
+            span = (self._tracer.span("shard_assemble", tid, parent=parent,
+                                      shard=sid, n=len(items))
+                    if tid is not None else NULL_SPAN)
+            with span:
+                imgs = [it[0] for it in items]
+                shard_masks = masks[positions]
+                # the worker's eval span hangs off THIS assemble span, so
+                # the assembled trace reads request -> flush ->
+                # shard_assemble -> worker_eval
+                wire = (self._tracer.wire_context(span)
+                        if tid is not None else None)
+                ens = core.eval_on(sid, imgs, shard_masks, snapshot,
+                                   trace=wire)
+                results = self._svc._results_from_ensembles(
+                    acts[positions], n_sel[positions], cost[positions],
+                    lat[positions], ens)
+                if log_ctx is not None:
+                    # the process plane never reaches _account_batch, so
+                    # the serving log is fed here (same record shape)
+                    self._svc._log_serving(
+                        imgs, [int(m) for m in shard_masks],
+                        log_ctx.get("costs"), results, log_ctx)
+            for (_, _, fut, _), res in zip(items, results):
                 fut.set_result(res)
         except BaseException as e:
-            for _, _, fut in items:
+            for _, _, fut, _ in items:
                 if not fut.done():
                     fut.set_exception(e)
 
@@ -396,9 +504,37 @@ class AsyncFederationService:
         with self._cv:
             self._scn_clock = int(step)
 
+    # -- observability accessors ------------------------------------------
+    @property
+    def stats(self) -> dict:
+        """The dict-shaped flush-counter accessor (key order is part of
+        the contract): live values read off the metrics registry."""
+        return {k: int(m.value) for k, m in self._stat.items()}
+
     def reset_stats(self) -> None:
         """Zero the flush counters (e.g. after warm-up traffic), so
         reported batching stats cover only the measured window."""
-        with self._cv:
-            for k in self.stats:
-                self.stats[k] = 0
+        with self._cv:     # same guard the counters increment under
+            self._metrics.reset(prefix="serving.")
+
+    def extra_metric_snapshots(self) -> list:
+        """Shard-side snapshots NOT already in the service's registry:
+        each worker process's registry shipped back over the pipe
+        (process backend) or the sharded core's hit/miss counters
+        (thread backend).  Feed these to ``Obs.write_metrics`` — the obs
+        registry itself is the service's registry, so only these extras
+        need merging in."""
+        if self.shard_backend == "process":
+            return [self.core.metrics_snapshot()]
+        return [counters_snapshot(self.core.stats, "core.")]
+
+    def metrics_snapshot(self, include_workers: bool = True) -> dict:
+        """One merged counters/gauges/histograms snapshot for this
+        service: its registry plus — for the process backend — each
+        worker's registry shipped back over the pipe, and for the thread
+        backend the sharded core's hit/miss counters.  Plain dicts,
+        mergeable with :func:`repro.obs.merge_snapshots`."""
+        snaps = [self._metrics.snapshot()]
+        if include_workers:
+            snaps.extend(self.extra_metric_snapshots())
+        return merge_snapshots(*snaps)

@@ -40,11 +40,16 @@ class FederationResult:
 
 class FederationService:
     def __init__(self, env: ArmolEnv, agent, *, deterministic: bool = True,
-                 transmission_ms: float = 20.0):
+                 transmission_ms: float = 20.0, obs=None):
         self.env = env
         self.agent = agent
         self.deterministic = deterministic
         self.transmission_ms = transmission_ms
+        # optional repro.obs.Obs handle: when its serving log is open,
+        # every accounting path appends one structured record per
+        # request (the off-policy-evaluation input).  Results are
+        # bit-identical with or without it — logging only copies values.
+        self.obs = obs
         self.provider_latency_ms = np.asarray(
             [p.latency_ms for p in env.traces.providers], np.float64)
         self._mask_weights = np.left_shift(
@@ -101,9 +106,37 @@ class FederationService:
                                         float(latency[t])))
         return out
 
+    def _log_serving(self, imgs: Sequence[int], masks: Sequence[int],
+                     costs_vec, results: List[FederationResult],
+                     log_ctx: Optional[dict] = None, core=None) -> None:
+        """Append one serving-log record per request (both accounting
+        paths funnel here: ``_account_batch`` for the sync/thread plane,
+        ``_account_shard_mp`` for the process plane).
+
+        When the flush was accounted on an in-process ``core``, AP50 is
+        read off that core's memo/lattice (a dict or table hit on the
+        warm path) instead of rescored inside the log; the process plane
+        passes no core and the log scores against its own gts memo.
+        """
+        obs = self.obs
+        if obs is None or obs.serving_log is None:
+            return
+        ctx = log_ctx or {}
+        aps = None
+        if core is not None and obs.serving_log.gts is not None:
+            aps = [core.ap50(int(i), int(m)) if m else 0.0
+                   for i, m in zip(imgs, masks)]
+        obs.serving_log.log_flush(
+            imgs, masks,
+            self.env.costs if costs_vec is None else costs_vec, results,
+            seg=ctx.get("seg"), clock=ctx.get("clock"),
+            reason=ctx.get("reason"),
+            backend=ctx.get("backend", "sync"), aps=aps)
+
     def _account_batch(self, imgs: Sequence[int], actions: np.ndarray,
                        *, core=None, costs: Optional[np.ndarray] = None,
-                       latency_ms: Optional[np.ndarray] = None
+                       latency_ms: Optional[np.ndarray] = None,
+                       log_ctx: Optional[dict] = None
                        ) -> List[FederationResult]:
         """Vectorized ensemble + cost/latency bookkeeping for one flush.
 
@@ -118,8 +151,12 @@ class FederationService:
             Detections.empty() if n_sel[t] == 0
             else core.ensemble(int(img), int(masks[t]))
             for t, img in enumerate(imgs)]
-        return self._results_from_ensembles(acts, n_sel, cost, latency,
-                                            ensembles)
+        results = self._results_from_ensembles(acts, n_sel, cost, latency,
+                                               ensembles)
+        if self.obs is not None:
+            self._log_serving(imgs, masks, costs, results, log_ctx,
+                              core=core)
+        return results
 
     def _account(self, img_idx: int,
                  action: np.ndarray) -> FederationResult:

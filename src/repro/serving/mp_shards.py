@@ -63,13 +63,37 @@ def _worker_main(conn, traces: TraceSet,
     state.  Every op answers with ``("ok", payload)`` or
     ``("err", message)``; an unreadable pipe means the parent is gone
     and the worker exits.
+
+    Observability: the worker keeps its own dependency-free
+    :class:`~repro.obs.metrics.MetricsRegistry` (per-op latency
+    histograms) plus per-op wall-time totals; ``introspect`` ships both
+    as plain dicts, which the parent merges with its own registry —
+    worker metrics cross the pipe as snapshots, never as live objects.
+    A traced ``eval`` (trace context rides the message as a
+    ``(trace_id, parent_span_id)`` tuple) answers with the rows AND a
+    finished span dict; untraced messages keep the seed wire shape.
     """
+    import zlib
+
     from repro.federation.vocab import WordGrouper
+    from repro.obs.metrics import (MetricsRegistry, counters_snapshot,
+                                   merge_snapshots)
     cores: Dict[object, SubsetEvaluationCore] = {
         None: SubsetEvaluationCore(traces, **cfg)}
     grouper = WordGrouper()
     base_fp = tuple(p.fingerprint(detection_only=True)
                     for p in traces.providers)
+    wreg = MetricsRegistry()
+    wall: Dict[str, float] = {}
+    n_spans = 0
+
+    def _fp_label(key) -> str:
+        # compact, stable per-fingerprint label: dets_keys are nested
+        # tuples (unwieldy as report keys); crc32 of the repr is enough
+        # to tell regimes apart in a cache report
+        return "base" if key is None else \
+            f"fp{zlib.crc32(repr(key).encode()) & 0xffffffff:08x}"
+
     conn.send(("ok", "ready"))
     while True:
         try:
@@ -77,10 +101,22 @@ def _worker_main(conn, traces: TraceSet,
         except (EOFError, OSError):
             return
         op = msg[0]
+        t_op = time.perf_counter()
         try:
             if op == "eval":
-                _, imgs, masks, key = msg
-                conn.send(("ok", cores[key].ensemble_rows(imgs, masks)))
+                _, imgs, masks, key, trace = msg
+                rows = cores[key].ensemble_rows(imgs, masks)
+                if trace is None:
+                    conn.send(("ok", rows))
+                else:
+                    n_spans += 1
+                    conn.send(("ok", (rows, {
+                        "name": "worker_eval", "trace": trace[0],
+                        "span": f"w{os.getpid():x}.{n_spans:x}",
+                        "parent": trace[1], "ts": time.time(),
+                        "dur_ms": (time.perf_counter() - t_op) * 1e3,
+                        "attrs": {"pid": os.getpid(),
+                                  "n": len(imgs)}})))
             elif op == "ap":
                 _, img, mask, against, key = msg
                 conn.send(("ok", cores[key].ap50(img, mask,
@@ -122,19 +158,30 @@ def _worker_main(conn, traces: TraceSet,
                 # holds (all regimes), mirroring the thread path's
                 # pool.agg_core_stats — a scenario-serving worker's
                 # activity lives in its segment cores, not the base one.
-                # cached_images stays scoped to the requested key: it is
-                # the per-core partition-corruption check surface.
+                # cache_sizes_by_core keeps the per-fingerprint partition
+                # visible (a worker serving three regimes reports three
+                # entries, not one opaque sum); cached_images stays
+                # scoped to the requested key: it is the per-core
+                # partition-corruption check surface.
                 key = msg[1]
                 agg_stats: Dict[str, int] = {}
                 agg_sizes: Dict[str, int] = {}
-                for c in cores.values():
+                by_core: Dict[str, Dict[str, int]] = {}
+                for ck, c in cores.items():
+                    by_core[_fp_label(ck)] = sizes = c.cache_sizes()
                     for k, v in c.stats.items():
                         agg_stats[k] = agg_stats.get(k, 0) + v
-                    for k, v in c.cache_sizes().items():
+                    for k, v in sizes.items():
                         agg_sizes[k] = agg_sizes.get(k, 0) + v
                 conn.send(("ok", {
                     "cache_sizes": agg_sizes,
+                    "cache_sizes_by_core": by_core,
                     "stats": agg_stats,
+                    "wall_s": {k: round(v, 6)
+                               for k, v in sorted(wall.items())},
+                    "metrics": merge_snapshots(
+                        wreg.snapshot(),
+                        counters_snapshot(agg_stats, "core.")),
                     "cached_images": cores[key].cached_images(),
                     "n_cores": len(cores),
                     "pid": os.getpid()}))
@@ -151,6 +198,13 @@ def _worker_main(conn, traces: TraceSet,
                 conn.send(("err", f"unknown op {op!r}"))
         except BaseException as e:       # noqa: BLE001 — ship it back
             conn.send(("err", f"{type(e).__name__}: {e}"))
+        finally:
+            # per-worker wall-time accounting: lattice/eval RPCs and
+            # segment installs used to vanish on the floor — they are
+            # exactly the quantities a capacity plan needs
+            dt_ms = (time.perf_counter() - t_op) * 1e3
+            wall[op] = wall.get(op, 0.0) + dt_ms / 1e3
+            wreg.histogram(f"worker.op_ms.{op}").observe(dt_ms)
 
 
 class ProcessShardedSubsetEvaluationCore:
@@ -199,6 +253,13 @@ class ProcessShardedSubsetEvaluationCore:
         self._installed: List[set] = [set() for _ in range(self.n_shards)]
         self._failed = [False] * self.n_shards
         self._closed = False
+        # observability (bind_obs): parent-side per-shard RPC latency
+        # histograms, a condemned-shard counter, and a span recorder for
+        # worker-shipped eval spans.  Unbound, the hot path pays one
+        # ``is None`` check per RPC.
+        self._rpc_hists = None
+        self._m_condemned = None
+        self._tracer = None
         # spawn everything first (children import in parallel), then wait
         # for each ready handshake — a failed import surfaces here, not
         # as a hang on the first eval
@@ -241,6 +302,19 @@ class ProcessShardedSubsetEvaluationCore:
                    voting=pool.voting, ablation=pool.ablation,
                    use_kernel=pool.use_kernel, **kw)
 
+    def bind_obs(self, metrics=None, tracer=None) -> None:
+        """Attach a :class:`~repro.obs.metrics.MetricsRegistry` (and
+        optionally a tracer for worker-shipped spans): every RPC's pipe
+        round-trip lands in a per-shard latency histogram and condemned
+        shards are counted.  The async service binds its own registry so
+        ``metrics_snapshot`` folds parent and worker views together."""
+        if metrics is not None:
+            self._rpc_hists = [
+                metrics.histogram(f"serving.shard_rpc_ms.s{sid}")
+                for sid in range(self.n_shards)]
+            self._m_condemned = metrics.counter("serving.shards_condemned")
+        self._tracer = tracer
+
     # -- pipe plumbing ---------------------------------------------------
     def _dead(self, sid: int, during: str, why: str) -> ShardWorkerError:
         code = self._procs[sid].exitcode
@@ -256,6 +330,8 @@ class ProcessShardedSubsetEvaluationCore:
         so the only safe move is to reap the worker and fail every
         subsequent call on this shard fast."""
         self._failed[sid] = True
+        if self._m_condemned is not None:
+            self._m_condemned.inc()
         proc = self._procs[sid]
         if proc.is_alive():
             proc.terminate()
@@ -294,11 +370,16 @@ class ProcessShardedSubsetEvaluationCore:
             raise ShardWorkerError(
                 f"shard {sid} worker is gone (earlier crash/timeout); "
                 f"restart the service to restore it")
+        t0 = time.perf_counter() if self._rpc_hists is not None else 0.0
         try:
             self._conns[sid].send(msg)
         except (BrokenPipeError, OSError):
             raise self._fail_shard(sid, msg[0], "died") from None
-        return self._recv(sid, msg[0])
+        payload = self._recv(sid, msg[0])
+        if self._rpc_hists is not None:
+            self._rpc_hists[sid].observe(
+                (time.perf_counter() - t0) * 1e3)
+        return payload
 
     def _rpc(self, sid: int, msg: tuple):
         with self._locks[sid]:
@@ -323,17 +404,26 @@ class ProcessShardedSubsetEvaluationCore:
 
     # -- batched per-shard entry point (the dispatcher hot path) ----------
     def eval_on(self, sid: int, img_indices: Sequence[int],
-                masks: Sequence[int],
-                snapshot=None) -> List[Detections]:
+                masks: Sequence[int], snapshot=None,
+                trace=None) -> List[Detections]:
         """Ensembles for (image, mask) rows homed on shard ``sid``, in
         request order.  ``snapshot`` scopes the rows to a scenario
-        segment (installed lazily, once per worker per fingerprint)."""
+        segment (installed lazily, once per worker per fingerprint).
+        ``trace`` is an optional ``(trace_id, parent_span_id)`` wire
+        context: the worker times its evaluation and ships a span back,
+        recorded on the bound tracer — the untraced reply shape is
+        unchanged."""
         imgs = [int(i) for i in img_indices]
         ms = [int(m) for m in masks]
+        if self._tracer is None:
+            trace = None
         with self._locks[sid]:
             key = None if snapshot is None else \
                 self._ensure_installed_locked(sid, snapshot)
-            rows = self._rpc_locked(sid, ("eval", imgs, ms, key))
+            rows = self._rpc_locked(sid, ("eval", imgs, ms, key, trace))
+        if trace is not None:
+            rows, span = rows
+            self._tracer.record(span)
         return [Detections.fast(*r) for r in rows]
 
     # -- delegated single-pair surface ------------------------------------
@@ -403,6 +493,36 @@ class ProcessShardedSubsetEvaluationCore:
             for k, v in rep["cache_sizes"].items():
                 agg[k] = agg.get(k, 0) + v
         return agg
+
+    def cache_sizes_by_core(self) -> Dict[str, Dict[str, int]]:
+        """Cache sizes keyed by detection fingerprint (``"base"`` for the
+        static core, ``"fp<crc32>"`` per installed regime), summed across
+        workers — a scenario-serving pool reports each regime's cache
+        partition instead of one opaque total."""
+        agg: Dict[str, Dict[str, int]] = {}
+        for rep in self._introspect():
+            for fp, sizes in rep.get("cache_sizes_by_core", {}).items():
+                slot = agg.setdefault(fp, {})
+                for k, v in sizes.items():
+                    slot[k] = slot.get(k, 0) + v
+        return agg
+
+    def worker_wall_s(self) -> Dict[str, float]:
+        """Wall seconds each worker spent inside ops (``eval``,
+        ``lattice``, ``install``, ...), summed across workers."""
+        agg: Dict[str, float] = {}
+        for rep in self._introspect():
+            for k, v in rep.get("wall_s", {}).items():
+                agg[k] = agg.get(k, 0.0) + v
+        return agg
+
+    def metrics_snapshot(self) -> Dict[str, dict]:
+        """Every worker's metrics registry (per-op latency histograms +
+        core cache-stat counters) merged into one plain-dict snapshot —
+        the cross-process half of the parent's unified metrics view."""
+        from repro.obs.metrics import merge_snapshots
+        return merge_snapshots(*[rep.get("metrics")
+                                 for rep in self._introspect()])
 
     @property
     def stats(self) -> Dict[str, int]:

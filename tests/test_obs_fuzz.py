@@ -1,0 +1,99 @@
+"""Property tests for the metrics snapshot algebra.
+
+``merge_snapshots`` is documented associative and commutative — the
+process-shard parent folds worker replies in whatever order the pipes
+answer, and the report CLI folds run artifacts in directory order, so
+any grouping must produce the same merged view.  Values are drawn as
+integer-valued floats: integer addition is exact in binary floating
+point, which keeps the algebraic properties testable with ``==``.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+pytest.importorskip("jax")
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.obs import empty_snapshot, merge_snapshots
+
+# one bucket layout per histogram name, as the registry enforces
+BOUNDS = {"h.a": [1.0, 5.0, 25.0], "h.b": [0.5, 8.0], "h.c": [10.0]}
+
+_int_val = st.integers(-1_000, 1_000).map(float)
+_nonneg = st.integers(0, 1_000)
+
+
+@st.composite
+def _histogram(draw, name):
+    bounds = BOUNDS[name]
+    return {
+        "buckets": list(bounds),
+        "counts": draw(st.lists(_nonneg, min_size=len(bounds) + 1,
+                                max_size=len(bounds) + 1)),
+        "sum": float(draw(st.integers(0, 100_000))),
+        "count": draw(_nonneg),
+        "min": draw(st.none() | _int_val),
+        "max": draw(st.none() | _int_val),
+    }
+
+
+@st.composite
+def _snapshot(draw):
+    snap = empty_snapshot()
+    for k in draw(st.lists(st.sampled_from(["c.x", "c.y", "c.z"]),
+                           unique=True)):
+        snap["counters"][k] = draw(_int_val)
+    for k in draw(st.lists(st.sampled_from(["g.x", "g.y"]), unique=True)):
+        snap["gauges"][k] = draw(_int_val)
+    for k in draw(st.lists(st.sampled_from(sorted(BOUNDS)), unique=True)):
+        snap["histograms"][k] = draw(_histogram(k))
+    return snap
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=_snapshot(), b=_snapshot())
+def test_merge_commutative(a, b):
+    assert merge_snapshots(a, b) == merge_snapshots(b, a)
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=_snapshot(), b=_snapshot(), c=_snapshot())
+def test_merge_associative(a, b, c):
+    left = merge_snapshots(merge_snapshots(a, b), c)
+    right = merge_snapshots(a, merge_snapshots(b, c))
+    flat = merge_snapshots(a, b, c)
+    assert left == right == flat
+
+
+@settings(max_examples=40, deadline=None)
+@given(snaps=st.lists(_snapshot(), max_size=5), data=st.data())
+def test_merge_permutation_invariant(snaps, data):
+    ref = merge_snapshots(*snaps)
+    perm = data.draw(st.permutations(snaps))
+    assert merge_snapshots(*perm) == ref
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=_snapshot())
+def test_merge_identities(a):
+    # empty snapshot and None are both units of the fold
+    merged = merge_snapshots(a, empty_snapshot(), None)
+    assert merged["counters"] == a["counters"]
+    assert merged["gauges"] == a["gauges"]
+    assert merged["histograms"] == a["histograms"]
+    # and the fold never aliases its inputs' histogram dicts
+    for k in merged["histograms"]:
+        assert merged["histograms"][k] is not a["histograms"][k]
+
+
+@settings(max_examples=30, deadline=None)
+@given(h=_histogram("h.a"))
+def test_merge_rejects_bucket_mismatch(h):
+    a, b = empty_snapshot(), empty_snapshot()
+    a["histograms"]["h"] = h
+    other = dict(h, buckets=list(h["buckets"]) + [99.0],
+                 counts=list(h["counts"]) + [0])
+    b["histograms"]["h"] = other
+    with pytest.raises(ValueError):
+        merge_snapshots(a, b)

@@ -15,7 +15,8 @@
 #                          benchmark regression gates (tools/check_bench.py
 #                          compares fresh subset_cache/lattice/serving/
 #                          train_driver/scenarios/serving_mp/
-#                          serving_scenarios/roofline/frontier numbers
+#                          serving_scenarios/roofline/frontier/
+#                          obs_overhead numbers
 #                          against the committed benchmarks/results/*.json
 #                          baselines; REPRO_BENCH_TOLERANCE overrides the
 #                          30% gate on noisy runners)
@@ -98,6 +99,11 @@ guarded_suite("test_roofline*.py", "roofline measurement suite")
 # scenario segments; anything training RL arms online must be slow
 guarded_suite("test_selection*.py", "selector policy suite",
               require_slow_when=lambda src: "run_online" in src)
+# observability: the unit suite stays fast; anything driving online
+# training or the process-shard backend must be slow-marked
+guarded_suite("test_obs*.py", "observability suite",
+              require_slow_when=lambda src: "run_online" in src
+              or "shard_backend" in src)
 if bad:
     sys.exit("optional dependency imported without a preceding "
              "pytest.importorskip guard (or serving/scenario test "
@@ -175,7 +181,7 @@ if [[ "$FULL" == 1 ]]; then
     echo "== benchmark regression gates (fresh vs committed baselines) =="
     python tools/check_bench.py subset_cache lattice serving \
         train_driver scenarios serving_mp serving_scenarios roofline \
-        frontier
+        frontier obs_overhead
 elif [[ "$HYGIENE" == 1 ]]; then
     echo "== subset-cache smoke benchmark (50 images) =="
     # scratch results dir: the committed baselines under benchmarks/
