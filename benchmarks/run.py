@@ -847,6 +847,157 @@ def bench_serving_mp():
     return out
 
 
+def bench_serving_socket():
+    """Multi-host serving plane: socket shard hosts vs process shard
+    workers, the HTTP front door's SLO, and host-kill degradation.
+
+    Three sections, all sized by REPRO_BENCH_IMAGES/_MAX_BATCH/_ROUNDS:
+
+    ``capacity``  — saturated-drain rps of ``AsyncFederationService``
+        with ``transport='socket'`` vs ``transport='process'`` at H in
+        {1, 2} hosts/workers, both alive together with interleaved
+        rounds (same machine, same run — the gated ratio
+        ``speedup_socket_vs_process_h2`` cancels absolute speed).  The
+        socket plane pays pickle + TCP framing where the process plane
+        pays pickle + pipe, so the ratio is its capacity *overhead*
+        check: it must stay near 1.0, and a collapse means a framing or
+        locking regression, not a slower machine.
+
+    ``http``      — the same drain pushed through the stdlib HTTP front
+        door.  The gated ``modeled_p99_ms`` is the p99 of the MODELED
+        request latency (paper latency model + pinned seeds) observed
+        over HTTP, which is machine-invariant: the transport may slow a
+        run down, but it must never change what the model answers.
+        Wall-clock HTTP rps is reported, not gated.
+
+    ``host_kill`` — H=2 socket hosts, one SIGKILLed mid-drain.  Every
+        in-flight and subsequent request must still complete
+        (``completed_frac`` gated at 1.0) with exactly one host
+        condemned — the requeue path, measured, not just unit-tested.
+    """
+    import signal
+
+    from repro.core.sac import SAC, SACConfig
+    from repro.federation.env import ArmolEnv
+    from repro.federation.providers import scalability_providers
+    from repro.federation.traces import generate_traces
+    from repro.serving.async_service import AsyncFederationService
+    from repro.serving.http_front import HttpFrontDoor, HttpServingClient
+
+    n_prov = 7
+    n_images = min(IMAGES, 240)
+    max_batch = int(os.environ.get("REPRO_BENCH_MAX_BATCH", "16"))
+    rounds = int(os.environ.get("REPRO_BENCH_ROUNDS", "3"))
+    hs = (1, 2)
+
+    traces = generate_traces(scalability_providers()[:n_prov], n_images,
+                             seed=0)
+    env = ArmolEnv(traces, mode="gt", beta=0.0, seed=1)
+    agent = SAC(SACConfig(state_dim=env.state_dim,
+                          n_providers=env.n_providers, hidden=(32, 32)))
+    reqs = [int(i) for i in
+            np.random.default_rng(0).permutation(n_images)]
+
+    def drain(svc) -> float:
+        svc.core.invalidate_images(reqs)
+        svc.reset_stats()
+        t0 = time.time()
+        futs = [svc.submit(i) for i in reqs]
+        for f in futs:
+            f.result()
+        return len(reqs) / (time.time() - t0)
+
+    out = {"n_providers": n_prov, "n_images": n_images,
+           "max_batch": max_batch, "rounds": rounds,
+           "transports": {"process": {}, "socket": {}}}
+
+    # -- capacity: socket vs process, interleaved, best-of --------------
+    for h in hs:
+        svcs = {}
+        try:
+            for transport in ("process", "socket"):
+                svc = AsyncFederationService(
+                    env, agent, max_batch=max_batch, max_wait_ms=2.0,
+                    workers=h, transport=transport)
+                svc.handle(reqs[0])          # single-request jit shape
+                svc.handle_many(reqs)        # batched jit shape + warm run
+                svcs[transport] = svc
+            best = {"process": 0.0, "socket": 0.0}
+            for _ in range(rounds):
+                for transport, svc in svcs.items():
+                    best[transport] = max(best[transport], drain(svc))
+            for transport, svc in svcs.items():
+                out["transports"][transport][f"h{h}"] = {
+                    "rps": round(best[transport], 1),
+                    "mean_flush": round(svc.mean_flush_size(), 1)}
+        finally:
+            for svc in svcs.values():
+                svc.close()
+    for h in hs:
+        p = out["transports"]["process"][f"h{h}"]["rps"]
+        s = out["transports"]["socket"][f"h{h}"]["rps"]
+        out[f"speedup_socket_vs_process_h{h}"] = round(s / max(p, 1e-9), 2)
+
+    # -- http: front-door drain, modeled p99 is the SLO -----------------
+    with AsyncFederationService(
+            env, agent, max_batch=max_batch, max_wait_ms=2.0, workers=2,
+            transport="socket") as svc, \
+            HttpFrontDoor(svc) as door:
+        cli = HttpServingClient(door.url)
+        try:
+            cli.handle(reqs[0])
+            best_rps, lats = 0.0, []
+            for _ in range(rounds):
+                svc.core.invalidate_images(reqs)
+                t0 = time.time()
+                results = [f.result()
+                           for f in [cli.submit(i) for i in reqs]]
+                best_rps = max(best_rps,
+                               len(reqs) / (time.time() - t0))
+                lats = [r.latency_ms for r in results]
+            lats.sort()
+            out["http"] = {
+                "rps": round(best_rps, 1),
+                "modeled_p99_ms": round(
+                    lats[min(int(0.99 * len(lats)), len(lats) - 1)], 3),
+                "modeled_mean_ms": round(sum(lats) / len(lats), 3)}
+        finally:
+            cli.close()
+
+    # -- host_kill: SIGKILL one of two hosts mid-drain -------------------
+    with AsyncFederationService(
+            env, agent, max_batch=max_batch, max_wait_ms=2.0, workers=2,
+            transport="socket") as svc:
+        svc.handle_many(reqs)
+        svc.core.invalidate_images(reqs)
+        svc.reset_stats()
+        futs = [svc.submit(i) for i in reqs]
+        os.kill(svc.core.host_pids()[0], signal.SIGKILL)
+        done = sum(1 for f in futs if f.result() is not None)
+        out["host_kill"] = {
+            "completed_frac": round(done / len(reqs), 3),
+            "condemned": svc.transport.condemned,
+            "requests_accounted": svc.stats["requests"]}
+
+    _save("serving_socket", out)
+    for transport in ("process", "socket"):
+        for h in hs:
+            r = out["transports"][transport][f"h{h}"]
+            _emit(f"serving_socket/{transport}_h{h}",
+                  1e6 / max(r["rps"], 1e-9),
+                  f"rps={r['rps']};mean_flush={r['mean_flush']}")
+    for h in hs:
+        _emit(f"serving_socket/speedup_h{h}", 0.0,
+              f"socket_vs_process={out[f'speedup_socket_vs_process_h{h}']}x")
+    _emit("serving_socket/http", 1e6 / max(out["http"]["rps"], 1e-9),
+          f"rps={out['http']['rps']};"
+          f"modeled_p99_ms={out['http']['modeled_p99_ms']}")
+    _emit("serving_socket/host_kill", 0.0,
+          f"completed_frac={out['host_kill']['completed_frac']};"
+          f"condemned={out['host_kill']['condemned']}")
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Serving scenarios: latency / cost SLOs per regime under provider dynamics
 # ---------------------------------------------------------------------------
@@ -1390,6 +1541,7 @@ BENCHES = {
     "train_driver": bench_train_driver,
     "serving": bench_serving,
     "serving_mp": bench_serving_mp,
+    "serving_socket": bench_serving_socket,
     "serving_scenarios": bench_serving_scenarios,
     "scenarios": bench_scenarios,
     "roofline": bench_roofline,

@@ -5,6 +5,9 @@
 Reads whichever artifacts exist under ``RUNDIR`` (all optional):
 
   * ``metrics.json``      — counter/gauge tables + histogram p50/p99
+                            (``metrics.prom``, its Prometheus text twin,
+                            is used as fallback; ``--prom FILE`` renders
+                            a saved ``/metrics`` scrape directly)
   * ``serving_log.jsonl`` — per-regime request/cost/latency/AP summary
                             with flush-reason and per-provider fee
                             breakdowns (the off-policy-evaluation input;
@@ -41,6 +44,14 @@ def load_run(run_dir: str) -> Dict:
     if os.path.exists(mpath):
         with open(mpath) as f:
             out["metrics"] = json.load(f)
+    else:
+        # a scrape-only run (or an external Prometheus dump) still
+        # renders: the text twin carries everything but exact min/max
+        ppath = os.path.join(run_dir, "metrics.prom")
+        if os.path.exists(ppath):
+            from repro.obs.prom import parse_prometheus
+            with open(ppath) as f:
+                out["metrics"] = parse_prometheus(f.read())
     spath = os.path.join(run_dir, "serving_log.jsonl")
     if os.path.exists(spath):
         out["serving"] = read_serving_log(spath)
@@ -118,10 +129,13 @@ def metrics_lines(snap: dict) -> List[str]:
             continue
         p50 = hist_quantile(h, 0.50)
         p99 = hist_quantile(h, 0.99)
+        # Prometheus-parsed snapshots carry no exact max (the format
+        # doesn't transport it) — report what survives
+        hmax = "n/a" if h["max"] is None else f"{h['max']:.3f}"
         lines.append(
             f"  hist     {name:<40s} n={h['count']} "
             f"mean={h['sum'] / h['count']:.3f} "
-            f"p50={p50:.3f} p99={p99:.3f} max={h['max']:.3f}")
+            f"p50={p50:.3f} p99={p99:.3f} max={hmax}")
     return lines
 
 
@@ -163,8 +177,22 @@ def render(run: Dict) -> str:
 
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("run_dir", help="directory written by --obs-dir")
+    ap.add_argument("run_dir", nargs="?", default=None,
+                    help="directory written by --obs-dir")
+    ap.add_argument("--prom", default=None, metavar="FILE",
+                    help="render a Prometheus text exposition instead "
+                         "of a run directory (e.g. a saved /metrics "
+                         "scrape from the HTTP front door)")
     args = ap.parse_args(argv)
+    if args.prom is not None:
+        from repro.obs.prom import parse_prometheus
+        with open(args.prom) as f:
+            snap = parse_prometheus(f.read())
+        print("\n".join([f"== obs report: {args.prom} (prometheus) =="]
+                        + metrics_lines(snap)))
+        return 0
+    if args.run_dir is None:
+        ap.error("run_dir is required unless --prom is given")
     if not os.path.isdir(args.run_dir):
         ap.error(f"not a directory: {args.run_dir}")
     print(render(load_run(args.run_dir)))

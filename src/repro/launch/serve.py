@@ -15,6 +15,12 @@ cache shards / ensemble threads, flush at ``--max-batch`` requests or
   PYTHONPATH=src python -m repro.launch.serve --federation --async \
       --requests 600 --workers 4 --max-batch 16 --max-wait-ms 2
 
+``--transport {thread,process,socket}`` picks the evaluation plane
+(``--shard-backend`` is the deprecated alias); ``--transport socket``
+with ``--hosts host:port,...`` joins externally started
+``repro.launch.shard_host`` servers — the multi-HOST path, see
+``docs/serving.md``.
+
 ``--policy {rl,cascade,mct,hybrid}`` swaps the subset-selection policy
 (the RL agent vs the ``repro.selection`` strategies; see
 ``docs/policies.md``); all four serve through the identical accounting
@@ -74,7 +80,21 @@ def run_federation(args) -> int:
         agent = HybridSelector(env, rl, beta=args.beta)
     rng = np.random.default_rng(args.seed)
     reqs = [int(i) for i in rng.integers(0, args.images, args.requests)]
-    mode = (f"async/{args.shard_backend}" if args.use_async else "sync")
+    transport = args.transport
+    if transport is None:
+        if args.shard_backend is not None:
+            print("[serve] --shard-backend is deprecated; "
+                  "use --transport")
+            transport = args.shard_backend
+        else:
+            transport = "thread"
+    topts = None
+    if args.hosts:
+        if transport != "socket":
+            raise SystemExit("--hosts requires --transport socket")
+        topts = {"hosts": [hp.strip() for hp in args.hosts.split(",")
+                           if hp.strip()]}
+    mode = (f"async/{transport}" if args.use_async else "sync")
     print(f"[serve] federation ({mode}, policy={args.policy}): "
           f"{env.n_providers} providers, "
           f"{args.images} images, {args.requests} requests"
@@ -84,8 +104,8 @@ def run_federation(args) -> int:
         with AsyncFederationService(
                 env, agent, max_batch=args.max_batch,
                 max_wait_ms=args.max_wait_ms, adaptive=args.adaptive,
-                workers=args.workers, pool=pool,
-                shard_backend=args.shard_backend, obs=obs) as svc:
+                workers=args.workers, pool=pool, transport=transport,
+                transport_options=topts, obs=obs) as svc:
             svc.handle_many(reqs[:args.max_batch])      # warm jit + shards
             svc.reset_stats()
             if pool is not None:
@@ -156,12 +176,23 @@ def main():
                     help="micro-batching AsyncFederationService")
     ap.add_argument("--workers", type=int, default=4,
                     help="async: cache shards / ensemble worker threads")
-    ap.add_argument("--shard-backend", default="thread",
+    ap.add_argument("--transport", default=None,
+                    choices=("thread", "process", "socket"),
+                    help="async: the evaluation plane — in-process "
+                         "threads (zero IPC, GIL-bound assembly), one "
+                         "worker process per shard (parallel assembly), "
+                         "or shard HOSTS over TCP (multi-host; spawns "
+                         "--workers local hosts unless --hosts names "
+                         "external ones).  Results are bit-identical "
+                         "across all three")
+    ap.add_argument("--hosts", default="",
+                    help="async --transport socket: comma-separated "
+                         "addr:port of externally started shard hosts "
+                         "(python -m repro.launch.shard_host); empty = "
+                         "spawn --workers hosts locally")
+    ap.add_argument("--shard-backend", default=None,
                     choices=("thread", "process"),
-                    help="async: shard workers as in-process threads "
-                         "(zero IPC, GIL-bound assembly) or one worker "
-                         "process per shard (parallel assembly; results "
-                         "are bit-identical)")
+                    help="DEPRECATED alias of --transport")
     ap.add_argument("--max-batch", type=int, default=16,
                     help="async: flush when this many requests queue")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,

@@ -36,13 +36,14 @@ from typing import Dict, List, Optional, Sequence
 from repro.obs.metrics import (DEFAULT_MS_BUCKETS, MetricsRegistry,
                                counters_snapshot, empty_snapshot,
                                hist_quantile, merge_snapshots)
+from repro.obs.prom import parse_prometheus, render_prometheus
 from repro.obs.serving_log import ServingLog, read_serving_log
 from repro.obs.tracing import NULL_SPAN, Tracer
 
 __all__ = ["Obs", "MetricsRegistry", "Tracer", "ServingLog",
            "merge_snapshots", "counters_snapshot", "empty_snapshot",
            "hist_quantile", "read_serving_log", "DEFAULT_MS_BUCKETS",
-           "NULL_SPAN"]
+           "NULL_SPAN", "render_prometheus", "parse_prometheus"]
 
 
 class Obs:
@@ -116,12 +117,18 @@ class Obs:
     def write_metrics(self, extra_snapshots: Sequence[Dict] = ()) -> Dict:
         """Merge the registry with any extra snapshots (e.g. worker-side
         registries shipped over the shard pipe) and write
-        ``metrics.json``.  Returns the merged snapshot."""
+        ``metrics.json`` plus its Prometheus text twin ``metrics.prom``
+        (the same exposition ``/metrics`` serves).  Returns the merged
+        snapshot."""
         snap = merge_snapshots(self.metrics.snapshot(), *extra_snapshots)
         if self.enabled and self.out_dir is not None:
             with open(os.path.join(self.out_dir, "metrics.json"),
                       "w") as f:
                 json.dump(snap, f, indent=1)
+            from repro.obs.prom import render_prometheus
+            with open(os.path.join(self.out_dir, "metrics.prom"),
+                      "w") as f:
+                f.write(render_prometheus(snap))
         return snap
 
     # -- lifecycle ---------------------------------------------------------

@@ -1,6 +1,35 @@
-from repro.serving.engine import ServeEngine, Request  # noqa: F401
-from repro.serving.federation_service import (  # noqa: F401
-    FederationResult, FederationService)
-from repro.serving.async_service import AsyncFederationService  # noqa: F401
-from repro.serving.mp_shards import (  # noqa: F401
-    ProcessShardedSubsetEvaluationCore, ShardWorkerError)
+"""Public serving API.
+
+The serving plane in one import: the LM engine, the sync + async
+federation services, the transport seam (``ShardTransport`` registry:
+thread / process / socket planes), the client facade shared by
+in-process and HTTP callers, and the HTTP front door.  Everything here
+is covered by ``docs/serving.md``; anything not exported is internal.
+"""
+from repro.serving.async_service import AsyncFederationService
+from repro.serving.client import (FederationClient, result_from_dict,
+                                  result_to_dict)
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.federation_service import (FederationResult,
+                                              FederationService)
+from repro.serving.http_front import (HttpFrontDoor, HttpServingClient,
+                                      create_app)
+from repro.serving.mp_shards import (ProcessShardedSubsetEvaluationCore,
+                                     ShardWorkerError)
+from repro.serving.socket_shards import SocketShardedSubsetEvaluationCore
+from repro.serving.transports import (ProcessTransport, ShardTransport,
+                                      SocketTransport, ThreadTransport,
+                                      available_transports,
+                                      get_transport, register_transport)
+
+__all__ = [
+    "ServeEngine", "Request",
+    "FederationService", "FederationResult", "AsyncFederationService",
+    "FederationClient", "result_to_dict", "result_from_dict",
+    "HttpFrontDoor", "HttpServingClient", "create_app",
+    "ShardTransport", "ThreadTransport", "ProcessTransport",
+    "SocketTransport", "register_transport", "get_transport",
+    "available_transports",
+    "ProcessShardedSubsetEvaluationCore",
+    "SocketShardedSubsetEvaluationCore", "ShardWorkerError",
+]

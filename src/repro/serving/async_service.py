@@ -11,18 +11,19 @@ turns the service into an open system:
     ``max_wait_ms``.  Each flush costs ONE batched agent forward (the
     whole point: the per-call jit dispatch overhead is amortized over the
     flush) and one batched IoU precompute per touched shard.
-  * **sharded caches** — the subset-evaluation memo is split across W
-    shared-nothing shards by ``img_idx % W``.  With the default
-    ``shard_backend="thread"`` (``ShardedSubsetEvaluationCore``) each
-    shard is owned by its own single-thread executor, so concurrent
-    flushes never contend on one dict and no locks guard the hot lookup
-    path — but ensemble assembly still serializes on the GIL.
-    ``shard_backend="process"`` promotes the shards to worker processes
-    (``ProcessShardedSubsetEvaluationCore``): same routing rule, same
-    merge order, bit-identical results, with assembly running on real
-    cores.  Accounting stays in the parent either way
-    (``FederationService._route_batch``); only ensemble rows cross the
-    process boundary.
+  * **sharded caches behind a transport** — the subset-evaluation memo
+    is split across W shared-nothing shards, each owned by one
+    dispatcher-side thread.  The evaluation plane is pluggable
+    (``transport=``, resolved through ``repro.serving.transports``):
+    ``"thread"`` (default, ``ShardedSubsetEvaluationCore`` — in-process,
+    zero IPC, assembly serializes on the GIL), ``"process"``
+    (``ProcessShardedSubsetEvaluationCore`` — one worker process per
+    shard, off the GIL) or ``"socket"``
+    (``SocketShardedSubsetEvaluationCore`` — H shard HOSTS over TCP with
+    consistent-hash routing and health-checked requeue).  All planes
+    answer bit-identical results.  Accounting stays in the parent either
+    way (``FederationService._route_batch``); only ensemble rows cross
+    the transport boundary.
   * **overlap** — the dispatcher hands each shard's slice of the flush to
     that shard's worker and immediately returns to batching: provider
     fan-out/ensemble assembly (the thread pool over the vectorized
@@ -37,19 +38,19 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.federation.env import ArmolEnv
-from repro.federation.evaluation import ShardedSubsetEvaluationCore
-from repro.obs.metrics import MetricsRegistry, counters_snapshot, \
-    merge_snapshots
+from repro.obs.metrics import MetricsRegistry, merge_snapshots
 from repro.obs.tracing import NULL_SPAN
 from repro.serving.federation_service import (FederationResult,
                                               FederationService)
+from repro.serving.transports import ShardTransport, get_transport
 
 # the dict-shaped stats contract: key order and names are part of the
 # public accessor (tests and benches read these directly)
@@ -64,13 +65,24 @@ class AsyncFederationService:
     ----------
     max_batch:    flush when this many requests are queued.
     max_wait_ms:  ... or when the oldest queued request is this old.
-    workers:      cache shards == ensemble workers (threads or processes).
-    shard_backend: ``"thread"`` (default — in-process shards, zero IPC)
-                  or ``"process"`` (one worker process per shard, off the
-                  GIL; results are bit-identical to the thread backend).
-    mp_context:   multiprocessing start method for the process backend
-                  (``"spawn"`` default — the parent runs jax, whose
-                  runtime threads do not survive ``fork``).
+    workers:      cache shards == ensemble workers (threads, processes
+                  or locally spawned hosts, per the transport).
+    transport:    the evaluation plane — a registered name (``"thread"``
+                  default: in-process shards, zero IPC; ``"process"``:
+                  one worker process per shard, off the GIL;
+                  ``"socket"``: H shard hosts over TCP with health-
+                  checked requeue) or a prebuilt
+                  :class:`~repro.serving.transports.ShardTransport`
+                  instance.  All planes answer bit-identical results.
+    transport_options: transport-specific knobs passed to the registry
+                  build (the socket plane's ``hosts=["addr:port", ...]``
+                  / health intervals).
+    shard_backend: DEPRECATED alias of ``transport`` (names resolve
+                  through the same registry); emits a
+                  ``DeprecationWarning``.
+    mp_context:   multiprocessing start method for the process/socket
+                  planes (``"spawn"`` default — the parent runs jax,
+                  whose runtime threads do not survive ``fork``).
     adaptive:     deadline-aware flush sizing — queue depth scales the
                   wait budget down (see ``_flush_deadline``).  Off by
                   default: fixed ``max_batch``/``max_wait_ms`` behavior
@@ -88,43 +100,53 @@ class AsyncFederationService:
                  transmission_ms: float = 20.0, max_batch: int = 16,
                  max_wait_ms: float = 2.0, workers: int = 2,
                  adaptive: bool = False, pool=None,
-                 shard_backend: str = "thread",
+                 transport: Union[str, ShardTransport, None] = None,
+                 transport_options: Optional[dict] = None,
+                 shard_backend: Optional[str] = None,
                  mp_context: str = "spawn", obs=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-        if shard_backend not in ("thread", "process"):
-            raise ValueError(f"shard_backend must be 'thread' or "
-                             f"'process', got {shard_backend!r}")
+        if shard_backend is not None:
+            # legacy string kwarg: same names, same registry, loud exit
+            # path.  Kept strict — the old surface only ever accepted
+            # these two values, so typos stay errors, not new planes.
+            warnings.warn(
+                "shard_backend= is deprecated; use transport="
+                "'thread'|'process'|'socket' (or a ShardTransport "
+                "instance) instead", DeprecationWarning, stacklevel=2)
+            if shard_backend not in ("thread", "process"):
+                raise ValueError(f"shard_backend must be 'thread' or "
+                                 f"'process', got {shard_backend!r}")
+            if transport is None:
+                transport = shard_backend
+        if transport is None:
+            transport = "thread"
         self.env = env
         self.agent = agent
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_ms) / 1e3
-        self.workers = int(workers)
         self.adaptive = bool(adaptive)
-        self.shard_backend = shard_backend
         # scenario pool (``repro.scenarios.pool.DynamicProviderPool`` or
         # anything with view_at/sharded_core_at/snapshot_at): each flush
         # is accounted under the pool state at the service's scenario
         # clock, which advances one step per request — mid-stream regime
-        # swaps apply at flush boundaries, never inside one.  The thread
-        # backend swaps the whole sharded core; the process backend keeps
-        # ONE worker pool for the service's lifetime and ships each
+        # swaps apply at flush boundaries, never inside one.  The inline
+        # (thread) plane swaps the whole sharded core; RPC planes keep
+        # ONE worker/host pool for the service's lifetime and ship each
         # segment across the boundary as a PoolSnapshot recipe.
         self.pool = pool
         self._scn_clock = 0
-        if shard_backend == "process":
-            from repro.serving.mp_shards import \
-                ProcessShardedSubsetEvaluationCore
-            if pool is not None:
-                self.core = ProcessShardedSubsetEvaluationCore.for_pool(
-                    pool, self.workers, mp_context=mp_context)
-            else:
-                self.core = ProcessShardedSubsetEvaluationCore.like(
-                    env.core, self.workers, mp_context=mp_context)
-        elif pool is not None:
-            self.core = pool.sharded_core_at(0, self.workers)
-        else:
-            self.core = ShardedSubsetEvaluationCore.like(env.core, workers)
+        if isinstance(transport, str):
+            transport = get_transport(transport).build(
+                env=env, pool=pool, workers=int(workers),
+                mp_context=mp_context, options=transport_options)
+        self.transport = transport
+        self.core = transport.core
+        # the transport decides the real shard count (joined socket
+        # hosts may outnumber ``workers``); one parent-side accounting
+        # thread per shard id
+        self.workers = int(transport.n_shards)
+        self.shard_backend = transport.name
         self._svc = FederationService(env, agent,
                                       deterministic=deterministic,
                                       transmission_ms=transmission_ms)
@@ -159,11 +181,10 @@ class AsyncFederationService:
                 bounds=tuple(float(b) for b in range(1, 65)))
             self._h_queue_wait = self._metrics.histogram(
                 "serving.queue_wait_ms")
-        if self.shard_backend == "process":
-            # per-shard RPC latency histograms + condemned-shard counter
-            # always land in the service's registry; worker-shipped spans
-            # only when tracing is on
-            self.core.bind_obs(self._metrics, self._tracer)
+        # per-shard RPC latency histograms + condemned-shard counters
+        # always land in the service's registry; worker-shipped spans
+        # only when tracing is on (no-op for inline transports)
+        self.transport.bind_obs(self._metrics, self._tracer)
         self._shard_pools = [
             ThreadPoolExecutor(max_workers=1,
                                thread_name_prefix=f"fed-shard-{i}")
@@ -281,12 +302,12 @@ class AsyncFederationService:
             # clock crosses a boundary while it overlaps the next flush
             view = self.pool.view_at(clock)
             costs, lats = view.costs, view.latencies
-            if self.shard_backend == "process":
-                # the worker pool persists across segments; the segment
-                # itself rides along with each shard request as a recipe
+            if not self.transport.inline:
+                # the worker/host pool persists across segments; the
+                # segment rides along with each shard request as a recipe
                 snapshot = self.pool.snapshot_at(clock)
             else:
-                core = self.pool.sharded_core_at(clock, self.workers)
+                core = self.transport.core_at(clock)
                 self.core = core
         sel = getattr(self.agent, "select_for_images", None)
         if sel is not None:
@@ -358,14 +379,14 @@ class AsyncFederationService:
                        "backend": self.shard_backend, "costs": costs}
         # fan out by home shard; the dispatcher does NOT wait — ensemble
         # assembly overlaps the next flush's agent forward
-        if self.shard_backend == "process":
+        if not self.transport.inline:
             # routing/accounting math stays in the parent (one vectorized
-            # pass); only (image, mask) rows cross the process boundary
+            # pass); only (image, mask) rows cross the transport boundary
             acts, n_sel, masks, cost, lat = self._svc._route_batch(
                 imgs, actions, costs=costs, latency_ms=lats)
             for sid, positions in self._partition(imgs).items():
                 self._shard_pools[sid].submit(
-                    self._account_shard_mp, core, sid,
+                    self._account_shard_mp, sid,
                     [batch[p] for p in positions], positions, snapshot,
                     acts, n_sel, masks, cost, lat, trace_ctx, log_ctx)
         else:
@@ -377,8 +398,10 @@ class AsyncFederationService:
 
     def _partition(self, imgs: np.ndarray):
         groups: dict = {}
+        route = (self.core.shard_id if self.transport.inline
+                 else self.transport.route)
         for pos, img in enumerate(imgs):
-            groups.setdefault(self.core.shard_id(img), []).append(pos)
+            groups.setdefault(route(int(img)), []).append(pos)
         return groups
 
     def _trace_parent(self, trace_ctx):
@@ -410,15 +433,16 @@ class AsyncFederationService:
                 if not fut.done():
                     fut.set_exception(e)
 
-    def _account_shard_mp(self, core, sid: int, items, positions,
+    def _account_shard_mp(self, sid: int, items, positions,
                           snapshot, acts, n_sel, masks, cost, lat,
                           trace_ctx=None, log_ctx=None) -> None:
-        """Process-backend twin of ``_account_shard``: runs on shard
-        ``sid``'s parent-side thread, which owns that worker's pipe for
+        """RPC twin of ``_account_shard``: runs on shard ``sid``'s
+        parent-side thread, which owns that worker/host connection for
         the duration (one batched RPC per flush per shard).  Accounting
         was already routed in the dispatcher; only ensembles come back.
-        A dead worker fails this shard's futures cleanly — other shards
-        and the dispatcher keep serving."""
+        A dead worker fails this shard's futures cleanly (the socket
+        plane first requeues to surviving hosts) — other shards and the
+        dispatcher keep serving."""
         tid, parent = self._trace_parent(trace_ctx)
         try:
             span = (self._tracer.span("shard_assemble", tid, parent=parent,
@@ -432,8 +456,8 @@ class AsyncFederationService:
                 # shard_assemble -> worker_eval
                 wire = (self._tracer.wire_context(span)
                         if tid is not None else None)
-                ens = core.eval_on(sid, imgs, shard_masks, snapshot,
-                                   trace=wire)
+                ens = self.transport.eval_batch(sid, imgs, shard_masks,
+                                                snapshot, trace=wire)
                 results = self._svc._results_from_ensembles(
                     acts[positions], n_sel[positions], cost[positions],
                     lat[positions], ens)
@@ -462,11 +486,11 @@ class AsyncFederationService:
         dropped = 0
         if self.pool is not None:
             dropped += self.pool.invalidate_images(img_indices)
-            if self.shard_backend == "thread":
+            if self.transport.inline:
                 # the live sharded core is one of the pool's _sharded
                 # entries, already swept above
                 return dropped
-        return dropped + self.core.invalidate_images(img_indices)
+        return dropped + self.transport.invalidate(img_indices)
 
     # -- lifecycle -------------------------------------------------------
     def close(self) -> None:
@@ -478,8 +502,7 @@ class AsyncFederationService:
         self._dispatcher.join()
         for pool in self._shard_pools:
             pool.shutdown(wait=True)
-        if self.shard_backend == "process":
-            self.core.close()       # reap the worker processes
+        self.transport.close()      # reap workers/hosts (inline: no-op)
 
     def __enter__(self) -> "AsyncFederationService":
         return self
@@ -519,21 +542,18 @@ class AsyncFederationService:
 
     def extra_metric_snapshots(self) -> list:
         """Shard-side snapshots NOT already in the service's registry:
-        each worker process's registry shipped back over the pipe
-        (process backend) or the sharded core's hit/miss counters
-        (thread backend).  Feed these to ``Obs.write_metrics`` — the obs
-        registry itself is the service's registry, so only these extras
-        need merging in."""
-        if self.shard_backend == "process":
-            return [self.core.metrics_snapshot()]
-        return [counters_snapshot(self.core.stats, "core.")]
+        each worker/host registry shipped back over the transport (RPC
+        planes) or the sharded core's hit/miss counters (inline).  Feed
+        these to ``Obs.write_metrics`` — the obs registry itself is the
+        service's registry, so only these extras need merging in."""
+        return [self.transport.snapshot()]
 
     def metrics_snapshot(self, include_workers: bool = True) -> dict:
         """One merged counters/gauges/histograms snapshot for this
-        service: its registry plus — for the process backend — each
-        worker's registry shipped back over the pipe, and for the thread
-        backend the sharded core's hit/miss counters.  Plain dicts,
-        mergeable with :func:`repro.obs.merge_snapshots`."""
+        service: its registry plus each shard's side of the story
+        (worker/host registries over RPC, the sharded core's hit/miss
+        counters inline).  Plain dicts, mergeable with
+        :func:`repro.obs.merge_snapshots`."""
         snaps = [self._metrics.snapshot()]
         if include_workers:
             snaps.extend(self.extra_metric_snapshots())

@@ -53,158 +53,229 @@ class ShardWorkerError(RuntimeError):
     in-flight requests fail cleanly; the parent never blocks forever."""
 
 
-def _worker_main(conn, traces: TraceSet,
-                 cfg: Dict[str, object]) -> None:
-    """Worker process body: one private core per detection fingerprint.
+def trace_content_digest(traces: TraceSet) -> str:
+    """Content hash of the roster's detection streams (gt + per-provider
+    boxes/scores/labels).  Provider fingerprints only capture *config* —
+    two rosters generated from different seeds share fingerprints yet
+    answer different rows — so cross-HOST compatibility checks must hash
+    the actual data."""
+    import hashlib
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(len(traces.gts)).tobytes())
+    for img in range(len(traces.gts)):
+        for det in [traces.gts[img]] + list(traces.dets[img]):
+            h.update(np.ascontiguousarray(det.boxes, np.float64).tobytes())
+            h.update(np.ascontiguousarray(det.scores,
+                                          np.float64).tobytes())
+            h.update(np.ascontiguousarray(det.labels, np.int64).tobytes())
+    return h.hexdigest()
 
-    ``cores[None]`` is the static core over the shipped traces; scenario
-    segments install under their ``dets_key`` and regenerate from the
-    SNAPSHOT's seed (the pool that authored it), never worker-local
-    state.  Every op answers with ``("ok", payload)`` or
-    ``("err", message)``; an unreadable pipe means the parent is gone
-    and the worker exits.
 
-    Observability: the worker keeps its own dependency-free
+class ShardOpHandler:
+    """Transport-agnostic implementation of the shard op contract.
+
+    One instance owns a shard's private cores (``cores[None]`` is the
+    static core over the shipped traces; scenario segments install under
+    their ``dets_key`` and regenerate from the SNAPSHOT's seed, never
+    shard-local state) and executes one op per call, returning
+    ``(status, payload)`` with ``status`` in ``{"ok", "err"}``.  The
+    *transport* frames the reply: the pipe worker (:func:`_worker_main`)
+    and the TCP shard host (``repro.serving.socket_shards``) both speak
+    ``(rid, op, *args)`` -> ``(rid, status, payload)`` around this same
+    dispatch, so a shard answers identically whether it sits behind a
+    multiprocessing pipe or a socket.
+
+    Observability: the handler keeps its own dependency-free
     :class:`~repro.obs.metrics.MetricsRegistry` (per-op latency
     histograms) plus per-op wall-time totals; ``introspect`` ships both
     as plain dicts, which the parent merges with its own registry —
-    worker metrics cross the pipe as snapshots, never as live objects.
+    shard metrics cross the wire as snapshots, never as live objects.
     A traced ``eval`` (trace context rides the message as a
     ``(trace_id, parent_span_id)`` tuple) answers with the rows AND a
     finished span dict; untraced messages keep the seed wire shape.
     """
-    import zlib
 
-    from repro.federation.vocab import WordGrouper
-    from repro.obs.metrics import (MetricsRegistry, counters_snapshot,
-                                   merge_snapshots)
-    cores: Dict[object, SubsetEvaluationCore] = {
-        None: SubsetEvaluationCore(traces, **cfg)}
-    grouper = WordGrouper()
-    base_fp = tuple(p.fingerprint(detection_only=True)
-                    for p in traces.providers)
-    wreg = MetricsRegistry()
-    wall: Dict[str, float] = {}
-    n_spans = 0
+    def __init__(self, traces: TraceSet, cfg: Dict[str, object]):
+        from repro.federation.vocab import WordGrouper
+        from repro.obs.metrics import MetricsRegistry
+        self.traces = traces
+        self.cfg = cfg
+        self.cores: Dict[object, SubsetEvaluationCore] = {
+            None: SubsetEvaluationCore(traces, **cfg)}
+        self._grouper = WordGrouper()
+        self._base_fp = tuple(p.fingerprint(detection_only=True)
+                              for p in traces.providers)
+        self.wreg = MetricsRegistry()
+        self.wall: Dict[str, float] = {}
+        self._n_spans = 0
+        # introspection/wall updates may come from several connection
+        # threads on a socket host (the pipe worker is single-threaded,
+        # where this lock is simply uncontended)
+        self._wall_lock = threading.Lock()
 
-    def _fp_label(key) -> str:
-        # compact, stable per-fingerprint label: dets_keys are nested
-        # tuples (unwieldy as report keys); crc32 of the repr is enough
-        # to tell regimes apart in a cache report
-        return "base" if key is None else \
-            f"fp{zlib.crc32(repr(key).encode()) & 0xffffffff:08x}"
+    def hello(self) -> Dict[str, object]:
+        """Roster identity for connect-time compatibility checks: a
+        client must refuse to serve through a host whose traces or
+        ensemble config differ from its own (answers would be valid but
+        not bit-identical to its other shards)."""
+        return {"pid": os.getpid(),
+                "n_providers": self.traces.n_providers,
+                "n_images": len(self.traces.gts),
+                "det_fingerprint": self._base_fp,
+                "trace_digest": trace_content_digest(self.traces),
+                "costs": [float(c) for c in self.traces.costs()],
+                "cfg": dict(self.cfg)}
 
-    conn.send(("ok", "ready"))
-    while True:
-        try:
-            msg = conn.recv()
-        except (EOFError, OSError):
-            return
-        op = msg[0]
+    def __call__(self, rid, op: str, args: tuple):
+        """Execute one op; returns ``(status, payload)``."""
+        cores = self.cores
         t_op = time.perf_counter()
         try:
             if op == "eval":
-                _, imgs, masks, key, trace = msg
+                imgs, masks, key, trace = args
                 rows = cores[key].ensemble_rows(imgs, masks)
                 if trace is None:
-                    conn.send(("ok", rows))
-                else:
-                    n_spans += 1
-                    conn.send(("ok", (rows, {
-                        "name": "worker_eval", "trace": trace[0],
-                        "span": f"w{os.getpid():x}.{n_spans:x}",
-                        "parent": trace[1], "ts": time.time(),
-                        "dur_ms": (time.perf_counter() - t_op) * 1e3,
-                        "attrs": {"pid": os.getpid(),
-                                  "n": len(imgs)}})))
+                    return "ok", rows
+                with self._wall_lock:
+                    self._n_spans += 1
+                    n_spans = self._n_spans
+                return "ok", (rows, {
+                    "name": "worker_eval", "trace": trace[0],
+                    "span": f"w{os.getpid():x}.{n_spans:x}",
+                    "parent": trace[1], "ts": time.time(),
+                    "dur_ms": (time.perf_counter() - t_op) * 1e3,
+                    "attrs": {"pid": os.getpid(), "n": len(imgs)}})
             elif op == "ap":
-                _, img, mask, against, key = msg
-                conn.send(("ok", cores[key].ap50(img, mask,
-                                                 against=against)))
+                img, mask, against, key = args
+                return "ok", cores[key].ap50(img, mask, against=against)
             elif op == "lattice":
-                # ONE RPC answers every subset of the image: the worker
+                # ONE RPC answers every subset of the image: the shard
                 # runs the vectorized full-lattice pass and ships the
                 # concatenated row arrays (LatticeResult.to_wire)
-                _, img, against, key = msg
-                conn.send(("ok", cores[key].evaluate_lattice(
-                    img, against=against).to_wire()))
+                img, against, key = args
+                return "ok", cores[key].evaluate_lattice(
+                    img, against=against).to_wire()
             elif op == "precompute":
-                _, imgs, key = msg
+                imgs, key = args
                 cores[key].precompute(imgs)
-                conn.send(("ok", None))
+                return "ok", None
             elif op == "install":
-                snap = msg[1]
+                snap = args[0]
                 if snap.dets_key not in cores:
                     # lazy import: serving must not pull the scenario
                     # engine unless a pool actually crosses the boundary
                     from repro.scenarios.pool import build_segment_traces
                     seg_traces = build_segment_traces(
-                        traces, snap.profiles, snap.dets_key, snap.seed,
-                        grouper, base_det_fp=base_fp)
+                        self.traces, snap.profiles, snap.dets_key,
+                        snap.seed, self._grouper,
+                        base_det_fp=self._base_fp)
                     cores[snap.dets_key] = SubsetEvaluationCore(
-                        seg_traces, **cfg)
-                conn.send(("ok", None))
+                        seg_traces, **self.cfg)
+                return "ok", None
             elif op == "invalidate":
                 # fan out across every installed core: the images' cached
                 # artifacts must die in ALL regimes, or a later segment
                 # swap would serve stale ensembles (the thread backend's
                 # counterpart is DynamicProviderPool.invalidate_images,
                 # which sweeps every materialized segment core)
-                _, imgs = msg
-                conn.send(("ok", sum(c.invalidate_images(imgs)
-                                     for c in cores.values())))
+                return "ok", sum(c.invalidate_images(args[0])
+                                 for c in cores.values())
             elif op == "introspect":
-                # stats/cache sizes aggregate over EVERY core this worker
-                # holds (all regimes), mirroring the thread path's
-                # pool.agg_core_stats — a scenario-serving worker's
-                # activity lives in its segment cores, not the base one.
-                # cache_sizes_by_core keeps the per-fingerprint partition
-                # visible (a worker serving three regimes reports three
-                # entries, not one opaque sum); cached_images stays
-                # scoped to the requested key: it is the per-core
-                # partition-corruption check surface.
-                key = msg[1]
-                agg_stats: Dict[str, int] = {}
-                agg_sizes: Dict[str, int] = {}
-                by_core: Dict[str, Dict[str, int]] = {}
-                for ck, c in cores.items():
-                    by_core[_fp_label(ck)] = sizes = c.cache_sizes()
-                    for k, v in c.stats.items():
-                        agg_stats[k] = agg_stats.get(k, 0) + v
-                    for k, v in sizes.items():
-                        agg_sizes[k] = agg_sizes.get(k, 0) + v
-                conn.send(("ok", {
-                    "cache_sizes": agg_sizes,
-                    "cache_sizes_by_core": by_core,
-                    "stats": agg_stats,
-                    "wall_s": {k: round(v, 6)
-                               for k, v in sorted(wall.items())},
-                    "metrics": merge_snapshots(
-                        wreg.snapshot(),
-                        counters_snapshot(agg_stats, "core.")),
-                    "cached_images": cores[key].cached_images(),
-                    "n_cores": len(cores),
-                    "pid": os.getpid()}))
+                return "ok", self._introspect(args[0])
+            elif op == "hello":
+                return "ok", self.hello()
             elif op == "ping":
-                conn.send(("ok", "pong"))
+                return "ok", "pong"
+            elif op == "stall":
+                # test hook: wedge this op for a fixed time (a shard that
+                # stops answering but stays alive)
+                time.sleep(float(args[0]))
+                return "ok", None
             elif op == "crash":
                 # test hook: die without cleanup, as a real crash would
                 os._exit(13)
             elif op == "stop":
-                conn.send(("ok", None))
-                conn.close()
-                return
+                return "ok", None
             else:
-                conn.send(("err", f"unknown op {op!r}"))
+                return "err", f"unknown op {op!r}"
         except BaseException as e:       # noqa: BLE001 — ship it back
-            conn.send(("err", f"{type(e).__name__}: {e}"))
+            return "err", f"{type(e).__name__}: {e}"
         finally:
-            # per-worker wall-time accounting: lattice/eval RPCs and
+            # per-shard wall-time accounting: lattice/eval RPCs and
             # segment installs used to vanish on the floor — they are
             # exactly the quantities a capacity plan needs
             dt_ms = (time.perf_counter() - t_op) * 1e3
-            wall[op] = wall.get(op, 0.0) + dt_ms / 1e3
-            wreg.histogram(f"worker.op_ms.{op}").observe(dt_ms)
+            with self._wall_lock:
+                self.wall[op] = self.wall.get(op, 0.0) + dt_ms / 1e3
+            self.wreg.histogram(f"worker.op_ms.{op}").observe(dt_ms)
+
+    def _introspect(self, key) -> Dict[str, object]:
+        # stats/cache sizes aggregate over EVERY core this shard holds
+        # (all regimes), mirroring the thread path's pool.agg_core_stats
+        # — a scenario-serving shard's activity lives in its segment
+        # cores, not the base one.  cache_sizes_by_core keeps the
+        # per-fingerprint partition visible (a shard serving three
+        # regimes reports three entries, not one opaque sum);
+        # cached_images stays scoped to the requested key: it is the
+        # per-core partition-corruption check surface.
+        import zlib
+
+        from repro.obs.metrics import counters_snapshot, merge_snapshots
+
+        def _fp_label(k) -> str:
+            # compact, stable per-fingerprint label: dets_keys are
+            # nested tuples (unwieldy as report keys); crc32 of the repr
+            # is enough to tell regimes apart in a cache report
+            return "base" if k is None else \
+                f"fp{zlib.crc32(repr(k).encode()) & 0xffffffff:08x}"
+
+        agg_stats: Dict[str, int] = {}
+        agg_sizes: Dict[str, int] = {}
+        by_core: Dict[str, Dict[str, int]] = {}
+        for ck, c in self.cores.items():
+            by_core[_fp_label(ck)] = sizes = c.cache_sizes()
+            for k, v in c.stats.items():
+                agg_stats[k] = agg_stats.get(k, 0) + v
+            for k, v in sizes.items():
+                agg_sizes[k] = agg_sizes.get(k, 0) + v
+        with self._wall_lock:
+            wall = {k: round(v, 6) for k, v in sorted(self.wall.items())}
+        return {"cache_sizes": agg_sizes,
+                "cache_sizes_by_core": by_core,
+                "stats": agg_stats,
+                "wall_s": wall,
+                "metrics": merge_snapshots(
+                    self.wreg.snapshot(),
+                    counters_snapshot(agg_stats, "core.")),
+                "cached_images": self.cores[key].cached_images(),
+                "n_cores": len(self.cores),
+                "pid": os.getpid()}
+
+
+def _worker_main(conn, traces: TraceSet,
+                 cfg: Dict[str, object]) -> None:
+    """Worker process body: recv -> :class:`ShardOpHandler` -> send.
+
+    Every message is ``(rid, op, *args)`` and every answer echoes the
+    request id — ``(rid, "ok", payload)`` or ``(rid, "err", message)``
+    — so the parent can verify reply correlation explicitly instead of
+    trusting pipe order (the contract remote/socket shards inherit; a
+    desynced reply is detected, never mis-attributed).  An unreadable
+    pipe means the parent is gone and the worker exits.
+    """
+    handler = ShardOpHandler(traces, cfg)
+    conn.send((0, "ok", "ready"))
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            return
+        rid, op = msg[0], msg[1]
+        status, payload = handler(rid, op, tuple(msg[2:]))
+        conn.send((rid, status, payload))
+        if op == "stop" and status == "ok":
+            conn.close()
+            return
 
 
 class ProcessShardedSubsetEvaluationCore:
@@ -250,6 +321,11 @@ class ProcessShardedSubsetEvaluationCore:
         self._procs: List[mp.Process] = []
         self._conns = []
         self._locks = [threading.Lock() for _ in range(self.n_shards)]
+        # per-shard monotonically increasing request ids: every reply
+        # must echo the id of the request it answers (0 is the ready
+        # handshake), so a desynchronized pipe is DETECTED instead of
+        # silently mis-attributing rows to the wrong request
+        self._rids = [0] * self.n_shards
         self._installed: List[set] = [set() for _ in range(self.n_shards)]
         self._failed = [False] * self.n_shards
         self._closed = False
@@ -275,7 +351,8 @@ class ProcessShardedSubsetEvaluationCore:
             self._conns.append(parent_conn)
         try:
             for sid in range(self.n_shards):
-                self._recv(sid, "start", timeout_s=start_timeout_s)
+                self._recv(sid, "start", timeout_s=start_timeout_s,
+                           expect_rid=0)
         except BaseException:
             self.close()
             raise
@@ -342,7 +419,8 @@ class ProcessShardedSubsetEvaluationCore:
         return self._dead(sid, during, why)
 
     def _recv(self, sid: int, during: str, *,
-              timeout_s: Optional[float] = None):
+              timeout_s: Optional[float] = None,
+              expect_rid: Optional[int] = None):
         conn, proc = self._conns[sid], self._procs[sid]
         deadline = time.monotonic() + (timeout_s if timeout_s is not None
                                        else self.op_timeout_s)
@@ -352,9 +430,17 @@ class ProcessShardedSubsetEvaluationCore:
             if time.monotonic() > deadline:
                 raise self._fail_shard(sid, during, "timed out")
         try:
-            status, payload = conn.recv()
+            rid, status, payload = conn.recv()
         except (EOFError, OSError):
             raise self._fail_shard(sid, during, "died") from None
+        if expect_rid is not None and rid != expect_rid:
+            # explicit reply correlation: a reply carrying the wrong
+            # request id means the pipe is desynchronized (e.g. a stale
+            # answer to an earlier timed-out request) — condemn the
+            # shard rather than attribute rows to the wrong request
+            raise self._fail_shard(
+                sid, during, f"broke reply correlation (reply id {rid} "
+                             f"!= request id {expect_rid})")
         if status != "ok":
             # the worker answered: the pipe is still in sync, the shard
             # survives — only THIS op failed (e.g. an unknown segment key)
@@ -371,11 +457,13 @@ class ProcessShardedSubsetEvaluationCore:
                 f"shard {sid} worker is gone (earlier crash/timeout); "
                 f"restart the service to restore it")
         t0 = time.perf_counter() if self._rpc_hists is not None else 0.0
+        self._rids[sid] += 1
+        rid = self._rids[sid]
         try:
-            self._conns[sid].send(msg)
+            self._conns[sid].send((rid,) + msg)
         except (BrokenPipeError, OSError):
             raise self._fail_shard(sid, msg[0], "died") from None
-        payload = self._recv(sid, msg[0])
+        payload = self._recv(sid, msg[0], expect_rid=rid)
         if self._rpc_hists is not None:
             self._rpc_hists[sid].observe(
                 (time.perf_counter() - t0) * 1e3)
@@ -551,7 +639,8 @@ class ProcessShardedSubsetEvaluationCore:
         for sid, (proc, conn) in enumerate(zip(self._procs, self._conns)):
             try:
                 if proc.is_alive():
-                    conn.send(("stop",))
+                    self._rids[sid] += 1
+                    conn.send((self._rids[sid], "stop"))
             except (BrokenPipeError, OSError):
                 pass
         for proc, conn in zip(self._procs, self._conns):

@@ -127,7 +127,7 @@ def test_worker_crash_is_clean_error_not_hang(proc_core):
     try:
         core.ensemble(0, 3)
         with core._locks[0]:
-            core._conns[0].send(("crash",))       # test hook: os._exit(13)
+            core._conns[0].send((0, "crash"))     # test hook: os._exit(13)
         t0 = time.time()
         with pytest.raises(ShardWorkerError, match="shard 0"):
             core.ensemble(0, 5)                   # img 0 homes on shard 0
@@ -198,7 +198,7 @@ def test_async_service_worker_death_fails_requests_cleanly():
                                 workers=2, shard_backend="process") as asvc:
         assert asvc.handle(0) is not None
         with asvc.core._locks[0]:
-            asvc.core._conns[0].send(("crash",))
+            asvc.core._conns[0].send((0, "crash"))
         with pytest.raises(ShardWorkerError):
             asvc.submit(0).result(timeout=60)     # img 0 -> dead shard 0
         # the other shard keeps serving
@@ -210,6 +210,45 @@ def test_bad_backend_rejected():
     with pytest.raises(ValueError, match="shard_backend"):
         AsyncFederationService(ENV, FixedAgent([1, 0, 0]),
                                shard_backend="greenlet")
+
+
+def test_stale_reply_id_condemns_shard_never_misattributes():
+    """Reply correlation is explicit on the wire: a reply whose request
+    id does not match the in-flight request means the pipe is
+    desynchronized (exactly the state a timed-out worker's late answer
+    leaves behind) — the shard must be condemned, never have the stale
+    rows attributed to the current request."""
+    core = ProcessShardedSubsetEvaluationCore.like(ENV.core, 2)
+    try:
+        real_conn = core._conns[0]
+
+        class StaleConn:
+            """Answers every request with the PREVIOUS request's id —
+            simulating replies arriving shuffled/shifted by one."""
+            rid = 0
+
+            def send(self, msg):
+                self.rid = msg[0]
+
+            def poll(self, timeout=0.0):
+                return True
+
+            def recv(self):
+                return (self.rid - 1, "ok", [])
+
+            def close(self):
+                real_conn.close()
+
+        core._conns[0] = StaleConn()
+        with pytest.raises(ShardWorkerError, match="reply correlation"):
+            core.ensemble(0, 3)               # img 0 homes on shard 0
+        assert core._failed[0]
+        # the survivor keeps serving correct rows
+        ref = SubsetEvaluationCore(TR)
+        got = core.ensemble(1, 3)
+        np.testing.assert_array_equal(got.boxes, ref.ensemble(1, 3).boxes)
+    finally:
+        core.close()
 
 
 # -- async service: mid-stream pool swap across the process boundary ------

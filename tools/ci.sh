@@ -15,8 +15,8 @@
 #                          benchmark regression gates (tools/check_bench.py
 #                          compares fresh subset_cache/lattice/serving/
 #                          train_driver/scenarios/serving_mp/
-#                          serving_scenarios/roofline/frontier/
-#                          obs_overhead numbers
+#                          serving_socket/serving_scenarios/roofline/
+#                          frontier/obs_overhead numbers
 #                          against the committed benchmarks/results/*.json
 #                          baselines; REPRO_BENCH_TOLERANCE overrides the
 #                          30% gate on noisy runners)
@@ -88,6 +88,9 @@ guarded_suite("test_lattice_eval*.py", "lattice parity suite")
 # multi-process serving suites spawn worker processes (seconds each on
 # the spawn context): slow-marked wholesale, nightly --full runs them
 guarded_suite("test_serving_mp*.py", "process-shard serving suite")
+# socket suites additionally spawn TCP shard-host processes and an HTTP
+# front door: slow-marked wholesale like the mp suites
+guarded_suite("test_serving_socket*.py", "socket-shard serving suite")
 guarded_suite("test_serving_scenarios*.py", "scenario serving suite")
 # device-resident training: the parity suite trains full drivers for
 # the bit-identical device-vs-host assertions (slow when it does), and
@@ -180,8 +183,8 @@ fi
 if [[ "$FULL" == 1 ]]; then
     echo "== benchmark regression gates (fresh vs committed baselines) =="
     python tools/check_bench.py subset_cache lattice serving \
-        train_driver scenarios serving_mp serving_scenarios roofline \
-        frontier obs_overhead
+        train_driver scenarios serving_mp serving_socket \
+        serving_scenarios roofline frontier obs_overhead
 elif [[ "$HYGIENE" == 1 ]]; then
     echo "== subset-cache smoke benchmark (50 images) =="
     # scratch results dir: the committed baselines under benchmarks/
